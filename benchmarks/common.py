@@ -1,0 +1,22 @@
+"""Shared benchmark plumbing: CSV emission in `name,us_per_call,derived`."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds of fn() (fn must block on device results)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

@@ -1,0 +1,62 @@
+"""Pallas kernel microbenchmarks: interpret-mode vs jnp-reference parity.
+
+On the CPU container the Pallas kernels execute in interpret mode (Python),
+so wall-time is NOT the TPU story; what this bench pins down is (a) numeric
+parity at benchmark sizes and (b) the reference path's throughput, which the
+CPU-side solver actually uses.  The derived column reports achieved GFLOP/s
+of the jnp path and the kernels' VMEM working set per tile.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.kernel_fn import KernelParams
+from repro.kernels import ops, ref
+
+
+def run() -> None:
+    rng = np.random.default_rng(17)
+    kp = KernelParams("rbf", gamma=0.1)
+    for n, m, p in ((1024, 512, 512), (2048, 1024, 256)):
+        x = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+        z = jnp.asarray(rng.normal(size=(m, p)), jnp.float32)
+        want = ref.gram_ref(x, z, kp)
+        dt = timeit(lambda: ref.gram_ref(x, z, kp).block_until_ready())
+        gflops = 2 * n * m * p / dt / 1e9
+        err = float(jnp.max(jnp.abs(ops.gram(x, z, kp) - want)))
+        vmem_kb = (128 * 512 + 128 * 512 + 128 * 128) * 4 / 1024
+        emit(f"kernel/gram/{n}x{m}x{p}", dt * 1e6,
+             f"ref_gflops={gflops:.1f};pallas_err={err:.2e};"
+             f"tile_vmem_kb={vmem_kb:.0f}")
+
+    # SMO epoch: rows/second of the reference path + kernel parity
+    n, B = 512, 256
+    G = jnp.asarray(rng.normal(size=(n, B)) / np.sqrt(B), jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=n), jnp.float32)
+    c = jnp.full((n,), 2.0, jnp.float32)
+    q = jnp.sum(G ** 2, axis=1)
+    alpha = jnp.zeros((n,), jnp.float32)
+    unch = jnp.zeros((n,), jnp.int32)
+    w = jnp.zeros((B,), jnp.float32)
+
+    def ref_epoch():
+        a2, u2, w2, v2 = ref.smo_epoch_ref(
+            G, y[:, None], c[:, None], q[:, None], alpha[:, None],
+            unch[:, None], w[None, :], full_pass=True)
+        w2.block_until_ready()
+
+    dt = timeit(ref_epoch)
+    a_p, _, w_p, _ = ops.smo_epoch(G, y, c, q, alpha, unch, w, full_pass=True)
+    a_r, _, w_r, _ = ref.smo_epoch_ref(
+        G, y[:, None], c[:, None], q[:, None], alpha[:, None],
+        unch[:, None], w[None, :], full_pass=True)
+    err = float(jnp.max(jnp.abs(w_p - w_r[0])))
+    emit(f"kernel/smo_epoch/{n}x{B}", dt * 1e6,
+         f"rows_per_s={n / dt:,.0f};pallas_err={err:.2e};"
+         f"w_scratch_kb={B * 4 / 1024:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Roofline numbers come from the
+dry-run artifacts (results/dryrun) via ``repro.analysis.roofline``, not from
+wall-clock — this container is CPU-only and TPU v5e is the target.
+
+    PYTHONPATH=src python -m benchmarks.run [table2 table3 shrinking fig3
+                                             eigdrop kernels]
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (eigdrop, fig3_stages, kernel_micro, shrinking,
+                            table2_solvers, table3_cv_grid)
+    suites = {
+        "table2": table2_solvers.run,
+        "table3": table3_cv_grid.run,
+        "shrinking": shrinking.run,
+        "fig3": fig3_stages.run,
+        "eigdrop": eigdrop.run,
+        "kernels": kernel_micro.run,
+    }
+    picked = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in picked:
+        suites[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Batched greedy decoding with KV caches / SSM states (serving example).
+
+Runs three architecture families (dense GQA, attention-free RWKV6, hybrid
+Jamba) through the same serve_step API.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve
+
+
+def main():
+    for arch in ("tinyllama-1.1b", "rwkv6-1.6b", "jamba-v0.1-52b"):
+        serve(arch, reduced=True, batch=2, prompt_len=16, gen=16)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Hillclimb #2: kimi-k2 decode_32k — replicated vs replicated_psum MoE.
+
+Lowers unrolled probes (1 and 2 groups) for both strategies and extrapolates
+to 60 MoE layers; records temp of the full scanned lowering too.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+
+import jax
+
+from repro.analysis.hlo import collective_stats
+from repro.configs import get_config
+from repro.launch import specs as S
+from repro.launch.dryrun import probe_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_serve_step
+from repro.models import attention as attn_mod
+from repro.models.model import _layout
+
+cfg = get_config("kimi-k2-1t-a32b")
+shape = S.SHAPES["decode_32k"]
+mesh = make_production_mesh()
+n_groups = _layout(cfg)[2]
+out = {}
+
+for strat in ("replicated", "replicated_psum"):
+    rec = {}
+    with jax.set_mesh(mesh):
+        params_sds, _ = S.param_specs(cfg, mesh)
+        ins = S.serve_input_specs(cfg, shape, mesh)
+        # full lowering for memory
+        step = make_serve_step(cfg, mesh, global_batch=shape.global_batch,
+                               moe_decode=strat)
+        c = jax.jit(step, donate_argnums=(2,)).lower(
+            params_sds, ins["tokens"], ins["state"], ins["pos"]).compile()
+        rec["temp_gib"] = c.memory_analysis().temp_size_in_bytes / 2**30
+        # probes for exact per-layer costs
+        attn_mod.FLASH_KV_CHUNK = 1 << 30
+        probes = []
+        for k in (1, 2):
+            pc = probe_config(cfg, k)
+            psds, _ = S.param_specs(pc, mesh)
+            pins = S.serve_input_specs(pc, shape, mesh)
+            pstep = make_serve_step(pc, mesh, global_batch=shape.global_batch,
+                                    moe_decode=strat, unroll=True)
+            comp = jax.jit(pstep).lower(psds, pins["tokens"], pins["state"],
+                                        pins["pos"]).compile()
+            probes.append({"cost": comp.cost_analysis(),
+                           "coll": collective_stats(comp.as_text())})
+        attn_mod.FLASH_KV_CHUNK = 1024
+
+        def extra(sel):
+            p1, p2 = sel(probes[0]), sel(probes[1])
+            return p1 + (n_groups - 1) * max(0.0, p2 - p1)
+
+        rec["flops"] = extra(lambda p: p["cost"].get("flops", 0.0))
+        rec["bytes"] = extra(lambda p: p["cost"].get("bytes accessed", 0.0))
+        rec["collective_bytes"] = extra(lambda p: p["coll"]["weighted_bytes"])
+    out[strat] = rec
+    print(strat, json.dumps(rec), flush=True)
+
+with open(os.path.join(os.path.dirname(__file__), "hillclimb_kimi_decode.json"),
+          "w") as f:
+    json.dump(out, f, indent=1)

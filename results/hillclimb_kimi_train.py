@@ -1,0 +1,74 @@
+"""Hillclimb #1: kimi-k2-1t train_4k — most collective-bound pair.
+
+Hypothesis (napkin): at (data=16, model=16) the dominant collective is the
+per-layer FSDP all-gather of expert weights (E_loc = 24 experts x 7168 x
+2048 x 3 x bf16 ~ 2.1 GiB/device/layer, x60 layers x fwd+remat+bwd).  The
+gathered bytes per device scale as total_layer_params / model_size, so
+widening the expert-parallel axis at constant chip count (256) should cut
+the weight-gather term ~linearly, while the token-dispatch all_to_all stays
+roughly constant.  Risk: the seq-parallel <-> TP activation all-gathers grow
+with per-device batch (B_loc = 256/data).
+
+Measures probe-extrapolated flops / HBM bytes / collective bytes on
+256-chip meshes (16,16), (8,32), (4,64).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+
+import jax
+from jax.sharding import AxisType
+
+from repro.analysis.hlo import collective_stats
+from repro.configs import get_config
+from repro.launch import specs as S
+from repro.launch.dryrun import probe_config
+from repro.launch.steps import make_train_step
+from repro.models import attention as attn_mod
+from repro.models.model import _layout
+from repro.optim import get_optimizer
+
+cfg = get_config("kimi-k2-1t-a32b")
+shape = S.SHAPES["train_4k"]
+n_groups = _layout(cfg)[2]
+out = {}
+
+for d_ax, m_ax in ((16, 16), (8, 32), (4, 64)):
+    mesh = jax.make_mesh((d_ax, m_ax), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    rec = {}
+    with jax.set_mesh(mesh):
+        attn_mod.FLASH_KV_CHUNK = 1 << 30
+        probes = []
+        for k in (1, 2):
+            pc = probe_config(cfg, k)
+            psds, _ = S.param_specs(pc, mesh)
+            opt = get_optimizer(pc.optimizer)
+            osds = S.opt_state_specs(opt, psds)
+            step = make_train_step(pc, opt, mesh,
+                                   global_batch=shape.global_batch,
+                                   unroll=True)
+            comp = jax.jit(step, donate_argnums=(0, 1)).lower(
+                psds, osds, S.batch_specs(pc, shape, mesh)).compile()
+            probes.append({"cost": comp.cost_analysis(),
+                           "coll": collective_stats(comp.as_text()),
+                           "temp": comp.memory_analysis().temp_size_in_bytes})
+        attn_mod.FLASH_KV_CHUNK = 1024
+
+        def extra(sel):
+            p1, p2 = sel(probes[0]), sel(probes[1])
+            return p1 + (n_groups - 1) * max(0.0, p2 - p1)
+
+        rec["flops"] = extra(lambda p: p["cost"].get("flops", 0.0))
+        rec["bytes"] = extra(lambda p: p["cost"].get("bytes accessed", 0.0))
+        rec["collective_bytes"] = extra(lambda p: p["coll"]["weighted_bytes"])
+        rec["by_kind_probe2"] = {
+            k: v for k, v in probes[1]["coll"]["by_kind"].items()
+            if v["count"]}
+        rec["probe2_temp_gib"] = probes[1]["temp"] / 2**30
+    out[f"mesh{d_ax}x{m_ax}"] = rec
+    print(f"mesh {d_ax}x{m_ax}:", json.dumps(rec), flush=True)
+
+with open(os.path.join(os.path.dirname(__file__),
+                       "hillclimb_kimi_train.json"), "w") as f:
+    json.dump(out, f, indent=1)

@@ -1,0 +1,37 @@
+"""Hillclimb #3 measurement: SVM stage1-project baseline vs v2 reshard."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import collective_stats
+from repro.core.distributed import (stage1_project_sharded,
+                                    stage1_project_sharded_v2)
+from repro.launch.mesh import make_production_mesh
+
+n, budget = 10_002_432, 10_000  # 256-divisible rows
+mesh = make_production_mesh()
+out = {}
+with jax.set_mesh(mesh):
+    knm = jax.ShapeDtypeStruct((n, budget), jnp.float32,
+                               sharding=NamedSharding(mesh, P(("data",), "model")))
+    proj = jax.ShapeDtypeStruct((budget, budget), jnp.float32,
+                                sharding=NamedSharding(mesh, P(None, None)))
+    for name, fn in (("baseline", stage1_project_sharded(mesh)),
+                     ("v2_reshard", stage1_project_sharded_v2(mesh))):
+        c = fn.lower(knm, proj).compile()
+        ma = c.memory_analysis()
+        out[name] = {
+            "temp_gib": ma.temp_size_in_bytes / 2**30,
+            "flops": c.cost_analysis().get("flops", 0.0),
+            "bytes": c.cost_analysis().get("bytes accessed", 0.0),
+            "collective_bytes": collective_stats(c.as_text())["weighted_bytes"],
+        }
+        print(name, json.dumps(out[name]), flush=True)
+
+with open(os.path.join(os.path.dirname(__file__),
+                       "hillclimb_svm_project.json"), "w") as f:
+    json.dump(out, f, indent=1)

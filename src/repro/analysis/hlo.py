@@ -1,0 +1,73 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic.
+
+`cost_analysis()` does not report collective bytes, so we sum the operand /
+result sizes of every collective op in the HLO and weight them by the
+per-device link-traffic factor of a ring implementation:
+
+    op                   counted tensor      weight (bytes on the wire/device)
+    all-reduce           result              2 (reduce-scatter + all-gather)
+    all-gather           result              1 (receives (n-1)/n ~ 1 x result)
+    reduce-scatter       largest operand     1
+    all-to-all           result              1 ((n-1)/n of the buffer moves)
+    collective-permute   result              1
+
+Ops inside while-loop bodies appear once in the text; the dry-run avoids the
+trip-count problem by measuring UNROLLED probe lowerings (see launch/dryrun).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# e.g.  %all-gather.3 = bf16[8,1024]{1,0} all-gather(...)
+#       ROOT %tuple ... (f32[4], s32[2]) all-to-all(...)
+_OP_RE = re.compile(
+    r"= *((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*)) *"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict:
+    """Aggregate per-kind collective bytes (per device, shard shapes)."""
+    by_kind = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        by_kind[kind]["count"] += 1
+        by_kind[kind]["bytes"] += b
+    weighted = sum(_COLLECTIVES[k] * v["bytes"] for k, v in by_kind.items())
+    return {
+        "by_kind": by_kind,
+        "raw_bytes": sum(v["bytes"] for v in by_kind.values()),
+        "weighted_bytes": float(weighted),
+        "total_count": sum(v["count"] for v in by_kind.values()),
+    }

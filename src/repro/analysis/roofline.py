@@ -1,0 +1,121 @@
+"""Three-term roofline from the dry-run artifacts (TPU v5e targets).
+
+    compute term    = HLO_FLOPs_per_device            / peak_FLOP/s  (197e12 bf16)
+    memory term     = HLO_bytes_per_device            / HBM_bw       (819e9)
+    collective term = weighted_collective_bytes/device / link_bw     (50e9)
+
+The dry-run already reports *per-device* numbers (XLA compiles the SPMD
+partition), loop-corrected via unrolled probes, so no further division by
+chip count is needed.  MODEL_FLOPS uses the 6·N·D rule with N = active
+params (MoE) and D = processed tokens; the ratio MODEL_FLOPS / HLO_FLOPS
+shows how much of the compiled compute is "useful" (catches remat/recompute
+and masked-attention waste).
+
+Usage:
+    PYTHONPATH=src python -m repro.analysis.roofline [--dir results/dryrun] \
+        [--format md|csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.specs import SHAPES
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_chips: int) -> float:
+    """6·N_active·D (train: x3 for fwd+bwd via the standard 6ND; decode: 2ND)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_chips
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok" or "flops" not in rec:
+        return None
+    n_chips = 512 if rec["mesh"] == "pod2x16x16" else 256
+    flops = rec["flops"]
+    bytes_hbm = rec["bytes_accessed"]
+    bytes_coll = rec["collective_bytes"]
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_hbm / HBM_BW
+    t_coll = bytes_coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], n_chips)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "mode": rec["mode"],
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "hlo_flops": flops, "hlo_bytes": bytes_hbm,
+        "collective_bytes": bytes_coll,
+        "temp_gib": rec.get("memory", {}).get("temp_bytes", 0) / 2**30,
+        "arg_gib": rec.get("memory", {}).get("argument_bytes", 0) / 2**30,
+    }
+
+
+def load_all(dirpath: str) -> List[Dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def fmt_md(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['temp_gib']:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def fmt_csv(rows: List[Dict]) -> str:
+    cols = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+            "dominant", "useful_ratio", "hlo_flops", "hlo_bytes",
+            "collective_bytes", "temp_gib", "arg_gib"]
+    out = [",".join(cols)]
+    for r in rows:
+        out.append(",".join(str(r[c]) for c in cols))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    default_dir = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                               "results", "dryrun")
+    ap.add_argument("--dir", default=os.path.abspath(default_dir))
+    ap.add_argument("--format", choices=["md", "csv"], default="md")
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    print(fmt_md(rows) if args.format == "md" else fmt_csv(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Baselines the paper compares against (Table 2), reimplemented in JAX."""
+from repro.baselines.exact_smo import ExactDualSVM
+from repro.baselines.llsvm import LLSVMStyle
+from repro.baselines.primal_sgd import PrimalSGDSVM
+
+__all__ = ["ExactDualSVM", "LLSVMStyle", "PrimalSGDSVM"]

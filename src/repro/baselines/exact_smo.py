@@ -1,0 +1,98 @@
+"""Exact (non-approximate) dual SVM solver — the ThunderSVM/LIBSVM stand-in.
+
+Dual coordinate ascent on the FULL precomputed kernel matrix Q (n x n).  This
+is the "nearly exact" reference LPD-SVM is compared against in Table 2: same
+optimization scheme, but iteration cost O(n) instead of O(B) and O(n^2) memory
+instead of O(nB) — precisely the trade-off the paper's low-rank stage removes.
+Only feasible for small/medium n (like ThunderSVM, it would OOM on ImageNet).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernel_fn import KernelParams, gram
+
+
+@partial(jax.jit, static_argnames=("tol", "max_epochs"))
+def _solve_exact(K, y, C, alpha0, tol: float, max_epochs: int):
+    """Coordinate ascent maintaining the full gradient vector (O(n)/step)."""
+    n = y.shape[0]
+    Q = (y[:, None] * y[None, :]) * K
+    q_diag = jnp.maximum(jnp.diag(Q), 1e-12)
+    grad0 = 1.0 - Q @ alpha0   # dD/dalpha
+
+    def epoch(carry):
+        alpha, grad, _, epoch_i = carry
+
+        def body(i, st):
+            alpha, grad, viol = st
+            g = grad[i]
+            at_lo = alpha[i] <= 0.0
+            at_hi = alpha[i] >= C
+            pg = jnp.where(at_lo, jnp.maximum(g, 0.0),
+                           jnp.where(at_hi, jnp.minimum(g, 0.0), g))
+            a_new = jnp.clip(alpha[i] + g / q_diag[i], 0.0, C)
+            delta = a_new - alpha[i]
+            grad = grad - delta * Q[i]
+            alpha = alpha.at[i].set(a_new)
+            return alpha, grad, jnp.maximum(viol, jnp.abs(pg))
+
+        alpha, grad, viol = jax.lax.fori_loop(0, n, body, (alpha, grad, 0.0))
+        return alpha, grad, viol, epoch_i + 1
+
+    def cond(carry):
+        _, _, viol, epoch_i = carry
+        return jnp.logical_and(viol >= tol, epoch_i < max_epochs)
+
+    alpha, grad, viol, epochs = jax.lax.while_loop(
+        cond, epoch, (alpha0, grad0, jnp.float32(jnp.inf), jnp.int32(0)))
+    return alpha, viol, epochs
+
+
+class ExactDualSVM:
+    """Binary or OVO-multiclass exact kernel SVM (full Q precomputation)."""
+
+    def __init__(self, kernel: KernelParams, C: float = 1.0, tol: float = 1e-2,
+                 max_epochs: int = 2000):
+        self.kernel, self.C, self.tol, self.max_epochs = kernel, float(C), tol, max_epochs
+        self.x_: Optional[np.ndarray] = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        x = np.asarray(x, np.float32)
+        self.classes_, labels = np.unique(np.asarray(y), return_inverse=True)
+        self.x_ = x
+        self.models_ = []  # (a, b, sel_idx, alpha, y_pm)
+        import itertools
+        for a, b in itertools.combinations(range(len(self.classes_)), 2):
+            sel = np.where((labels == a) | (labels == b))[0]
+            y_pm = jnp.asarray(np.where(labels[sel] == a, 1.0, -1.0), jnp.float32)
+            K = gram(jnp.asarray(x[sel]), jnp.asarray(x[sel]), self.kernel)
+            alpha0 = jnp.zeros((len(sel),), jnp.float32)
+            alpha, viol, epochs = _solve_exact(K, y_pm, self.C, alpha0,
+                                               self.tol, self.max_epochs)
+            self.models_.append((a, b, sel, np.asarray(alpha), np.asarray(y_pm)))
+        return self
+
+    def decision_function(self, x: np.ndarray) -> np.ndarray:
+        x = jnp.asarray(np.asarray(x, np.float32))
+        cols = []
+        for a, b, sel, alpha, y_pm in self.models_:
+            K = gram(x, jnp.asarray(self.x_[sel]), self.kernel)
+            cols.append(np.asarray(K @ jnp.asarray(alpha * y_pm)))
+        return np.stack(cols, axis=1)
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        d = self.decision_function(x)
+        if len(self.classes_) == 2:
+            return self.classes_[np.where(d[:, 0] > 0, 0, 1)]
+        from repro.core.ovo import ovo_vote, class_pairs
+        pred = ovo_vote(d, class_pairs(len(self.classes_)), len(self.classes_))
+        return self.classes_[pred]
+
+    def error(self, x, y) -> float:
+        return float(np.mean(self.predict(x) != np.asarray(y)))

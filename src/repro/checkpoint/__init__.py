@@ -1,0 +1,4 @@
+"""Msgpack pytree checkpointing (offline container — no orbax)."""
+from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]

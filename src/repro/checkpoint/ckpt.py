@@ -1,0 +1,67 @@
+"""Flat-keyed msgpack checkpoints for arbitrary pytrees of jnp/np arrays.
+
+Layout: <dir>/step_<n>.msgpack, each a map of "/"-joined key paths to
+{dtype, shape, raw-bytes} triples.  Restores onto a template pytree so key
+order / tree structure is validated on load.  Atomic via tmp-file rename.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree: Any):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    payload = {
+        k: {"dtype": str(v.dtype), "shape": list(v.shape), "data": v.tobytes()}
+        for k, v in _flatten(tree).items()
+    }
+    path = os.path.join(directory, f"step_{step:08d}.msgpack")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for fn in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)\.msgpack$", fn))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, template: Any) -> Any:
+    path = os.path.join(directory, f"step_{step:08d}.msgpack")
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_keys, leaf in flat_t:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_keys)
+        if key not in payload:
+            raise KeyError(f"checkpoint missing {key!r}")
+        rec = payload[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(template), leaves)

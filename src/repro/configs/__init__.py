@@ -1,0 +1,4 @@
+"""Assigned-architecture configs (+ the paper's own SVM workloads)."""
+from repro.configs.base import ModelConfig, get_config, list_configs, ARCH_IDS
+
+__all__ = ["ModelConfig", "get_config", "list_configs", "ARCH_IDS"]

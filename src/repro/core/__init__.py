@@ -1,0 +1,18 @@
+"""LPD-SVM core: the paper's contribution as a composable JAX module."""
+from repro.core.kernel_fn import KernelParams, gram, kernel_diag
+from repro.core.nystrom import LowRankFactor, compute_factor, select_landmarks
+from repro.core.dual_solver import (SolverConfig, TaskBatch, SolveResult,
+                                    solve_one, solve_batch, duality_gap)
+from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
+from repro.core.svm import LPDSVM
+from repro.core.cv import grid_search, cross_validate, kfold_masks
+from repro.core.distributed import solve_tasks_sharded
+
+__all__ = [
+    "KernelParams", "gram", "kernel_diag",
+    "LowRankFactor", "compute_factor", "select_landmarks",
+    "SolverConfig", "TaskBatch", "SolveResult", "solve_one", "solve_batch",
+    "duality_gap", "build_ovo_tasks", "class_pairs", "ovo_vote",
+    "LPDSVM", "grid_search", "cross_validate", "kfold_masks",
+    "solve_tasks_sharded",
+]

@@ -1,0 +1,159 @@
+"""Distribution layer for LPD-SVM on a TPU mesh.
+
+Two parallelism patterns, mirroring the paper's hardware mapping (sec. 4):
+
+1. **Stage 1 is dense-linear-algebra parallel** — the paper runs it on GPUs
+   with cuBLAS/cuSOLVER.  Here the gram rows are sharded over the mesh
+   ("data" x optionally "pod"), the budget axis over "model", and the B x B
+   eigendecomposition is replicated (B <= 10^4, same as the paper's single-GPU
+   eig).  `stage1_steps` exposes the jit-able pieces with shardings for the
+   dry-run.
+
+2. **Stage 2 is a task farm** — one binary problem is sequential, but OVO
+   pairs x CV folds x grid cells give thousands of independent tasks ("far
+   more parallelism than we need to fully exploit even multiple GPUs").
+   `solve_tasks_sharded` shards the task axis over every mesh device via
+   shard_map; each device vmaps its local chunk.  G is replicated (it is the
+   shared read-only factor; per-chip HBM plays the paper's 512 GB RAM role).
+
+Both work unchanged on a single-device mesh (tests) and the production
+16x16 / 2x16x16 meshes (dry-run).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.dual_solver import SolveResult, SolverConfig, TaskBatch, solve_batch
+from repro.core.kernel_fn import KernelParams, apply_epilogue
+
+
+def _mesh_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def pad_tasks(tasks: TaskBatch, multiple: int) -> Tuple[TaskBatch, int]:
+    """Pad the task axis to a device-count multiple with inert (c=0) tasks."""
+    T = tasks.n_tasks
+    T_pad = -(-T // multiple) * multiple
+    if T_pad == T:
+        return tasks, T
+    pad = T_pad - T
+
+    def padT(a):
+        return jnp.concatenate([a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
+
+    return TaskBatch(padT(tasks.idx), padT(tasks.y), padT(tasks.c),
+                     padT(tasks.alpha0)), T
+
+
+def solve_tasks_sharded(
+    G: jnp.ndarray,
+    tasks: TaskBatch,
+    config: SolverConfig,
+    mesh: Mesh,
+    task_axes: Optional[Sequence[str]] = None,
+) -> SolveResult:
+    """Solve a TaskBatch with the task axis sharded over the whole mesh."""
+    if task_axes is None:
+        task_axes = tuple(mesh.axis_names)
+    task_axes = tuple(task_axes)
+    n_dev = _mesh_size(mesh, task_axes)
+    tasks, T = pad_tasks(tasks, n_dev)
+
+    tspec = P(task_axes)
+
+    @partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(None, None), tspec, tspec, tspec, tspec),
+        out_specs=SolveResult(tspec, tspec, P(task_axes), P(task_axes),
+                              P(task_axes), P(task_axes)),
+        check_vma=False,   # solver carries mix invariant consts with varying data
+    )
+    def farm(G, idx, y, c, a0):
+        return solve_batch(G, TaskBatch(idx, y, c, a0), config)
+
+    res = farm(G, tasks.idx, tasks.y, tasks.c, tasks.alpha0)
+    # strip task padding
+    return SolveResult(*(r[:T] for r in res))
+
+
+# ---------------------------------------------------------------------------
+# Stage 1 with explicit shardings (used by launch/dryrun.py and train_svm.py)
+# ---------------------------------------------------------------------------
+
+def stage1_gram_sharded(mesh: Mesh, params: KernelParams,
+                        row_axes: Sequence[str] = ("data",),
+                        col_axis: str = "model"):
+    """Return a jit'd K(x, z) with x rows sharded and z columns sharded."""
+    row_spec = P(tuple(row_axes), None)
+    col_spec = P(col_axis, None)
+
+    @partial(jax.jit,
+             in_shardings=(NamedSharding(mesh, row_spec),
+                           NamedSharding(mesh, col_spec)),
+             out_shardings=NamedSharding(mesh, P(tuple(row_axes), col_axis)))
+    def gram_dist(x, z):
+        dot = jnp.einsum("np,mp->nm", x, z, precision=jax.lax.Precision.HIGHEST)
+        x_sq = jnp.sum(x * x, axis=-1)
+        z_sq = jnp.sum(z * z, axis=-1)
+        return apply_epilogue(dot, x_sq, z_sq, params)
+
+    return gram_dist
+
+
+def stage1_project_sharded(mesh: Mesh, row_axes: Sequence[str] = ("data",),
+                           col_axis: str = "model"):
+    """Return a jit'd (K_nm, projector) -> G with G rows kept data-sharded.
+
+    K_nm arrives (rows x "data", cols x "model"); the projector (B, B') is
+    replicated; the contraction over B induces one reduce-scatter/all-reduce
+    over "model" — visible in the dry-run collective schedule.
+    """
+    @partial(jax.jit,
+             in_shardings=(NamedSharding(mesh, P(tuple(row_axes), col_axis)),
+                           NamedSharding(mesh, P(None, None))),
+             out_shardings=NamedSharding(mesh, P(tuple(row_axes), col_axis)))
+    def project(k_nm, projector):
+        return jnp.einsum("nb,bk->nk", k_nm, projector,
+                          precision=jax.lax.Precision.HIGHEST)
+
+    return project
+
+
+def stage1_project_sharded_v2(mesh: Mesh, row_axes: Sequence[str] = ("data",),
+                              col_axis: str = "model"):
+    """Beyond-paper §Perf fix for the stage-1 projection (hillclimb #3).
+
+    The baseline keeps K_nm sharded (rows x "data", cols x "model") and lets
+    GSPMD handle the contraction over the "model"-sharded budget axis — which
+    it implements by ALL-GATHERING the full (n_loc, B) block on every device
+    (25 GB/device at the paper's n=10^7, B=10^4 scale; temp 46.6 GiB).
+
+    Hypothesis: resharding K_nm to rows x ("data","model") first makes the
+    matmul fully local — the only collective is the reshard itself, which
+    moves each element once (1.56 GB/device) instead of (M-1)x.
+    """
+    all_rows = tuple(row_axes) + (col_axis,)
+
+    @partial(jax.jit,
+             in_shardings=(NamedSharding(mesh, P(tuple(row_axes), col_axis)),
+                           NamedSharding(mesh, P(None, None))),
+             out_shardings=NamedSharding(mesh, P(all_rows, None)))
+    def project(k_nm, projector):
+        k_nm = jax.lax.with_sharding_constraint(k_nm, P(all_rows, None))
+        return jnp.einsum("nb,bk->nk", k_nm, projector,
+                          precision=jax.lax.Precision.HIGHEST)
+
+    return project
+
+
+def replicate(mesh: Mesh, x):
+    return jax.device_put(x, NamedSharding(mesh, P(*((None,) * x.ndim))))

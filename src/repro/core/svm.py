@@ -1,0 +1,195 @@
+"""Public LPD-SVM estimator: the paper's two-stage algorithm behind one API.
+
+    svm = LPDSVM(kernel=KernelParams("rbf", gamma=2**-7), C=2**5, budget=1000)
+    svm.fit(x, y)           # stage 1 (factor G) + stage 2 (dual CA, OVO)
+    svm.predict(x_test)
+
+Stage 1 can be reused across fits (cross-validation, C grids, OVO pairs) by
+passing a precomputed `LowRankFactor` — see `core/cv.py` which exploits
+exactly the reuse pattern the paper measures in Table 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dual_solver import SolveResult, SolverConfig, TaskBatch, solve_batch
+from repro.core.kernel_fn import KernelParams, gram
+from repro.core.nystrom import LowRankFactor, compute_factor
+from repro.core.ovo import build_ovo_tasks, ovo_decision_values, ovo_vote
+
+
+@dataclasses.dataclass
+class FitStats:
+    """Timings of the stages (paper figure 3 breakdown)."""
+
+    stage1_seconds: float = 0.0     # preparation + computation of G
+    stage2_seconds: float = 0.0     # linear SVM training (SMO)
+    n_tasks: int = 0
+    epochs: Optional[np.ndarray] = None
+    violations: Optional[np.ndarray] = None
+    effective_rank: int = 0
+
+
+class LPDSVM:
+    def __init__(
+        self,
+        kernel: KernelParams = KernelParams("rbf", gamma=1.0),
+        C: float = 1.0,
+        budget: int = 1000,
+        tol: float = 1e-2,
+        max_epochs: int = 1000,
+        shrink: bool = True,
+        seed: int = 0,
+        gram_fn: Callable = gram,
+        solve_fn: Callable = solve_batch,
+    ):
+        self.kernel = kernel
+        self.C = float(C)
+        self.budget = int(budget)
+        self.config = SolverConfig(tol=tol, max_epochs=max_epochs, shrink=shrink)
+        self.seed = seed
+        self.gram_fn = gram_fn
+        self.solve_fn = solve_fn
+        # fitted state
+        self.factor: Optional[LowRankFactor] = None
+        self.classes_: Optional[np.ndarray] = None
+        self.pairs_ = None
+        self.W_: Optional[jnp.ndarray] = None      # (T, B) per-pair weights
+        self.alpha_: Optional[jnp.ndarray] = None  # (T, n_pad)
+        self.tasks_: Optional[TaskBatch] = None
+        self.stats = FitStats()
+
+    # ------------------------------------------------------------------ stage 1
+    def prepare(self, x: np.ndarray) -> LowRankFactor:
+        """Compute (or return the cached) low-rank factor G for `x`."""
+        if self.factor is None:
+            t0 = time.perf_counter()
+            self.factor = compute_factor(
+                jnp.asarray(x, jnp.float32), self.kernel, self.budget,
+                key=jax.random.PRNGKey(self.seed), gram_fn=self.gram_fn)
+            self.factor.G.block_until_ready()
+            self.stats.stage1_seconds = time.perf_counter() - t0
+            self.stats.effective_rank = self.factor.effective_rank
+        return self.factor
+
+    # ------------------------------------------------------------------ stage 2
+    def fit(self, x: np.ndarray, y: np.ndarray,
+            factor: Optional[LowRankFactor] = None,
+            warm_alpha: Optional[np.ndarray] = None) -> "LPDSVM":
+        y = np.asarray(y)
+        self.classes_, labels = np.unique(y, return_inverse=True)
+        n_classes = len(self.classes_)
+        if n_classes < 2:
+            raise ValueError("need at least two classes")
+        if factor is not None:
+            self.factor = factor
+        self.prepare(x)
+
+        warm = None
+        if warm_alpha is not None:
+            warm = [np.asarray(a) for a in warm_alpha]
+        tasks, self.pairs_ = build_ovo_tasks(labels, n_classes, self.C, alpha0=warm)
+        self.tasks_ = tasks
+        t0 = time.perf_counter()
+        res: SolveResult = self.solve_fn(self.factor.G, tasks, self.config)
+        res.w.block_until_ready()
+        self.stats.stage2_seconds = time.perf_counter() - t0
+        self.stats.n_tasks = tasks.n_tasks
+        self.stats.epochs = np.asarray(res.epochs)
+        self.stats.violations = np.asarray(res.violation)
+        self.W_ = res.w
+        self.alpha_ = res.alpha
+        return self
+
+    # --------------------------------------------------------------- prediction
+    def decision_function(self, x: np.ndarray) -> np.ndarray:
+        if self.W_ is None:
+            raise RuntimeError("fit first")
+        feats = self.factor.features(jnp.asarray(x, jnp.float32))
+        return np.asarray(ovo_decision_values(feats, self.W_))
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        d = self.decision_function(x)
+        if len(self.classes_) == 2:
+            pred = np.where(d[:, 0] > 0, 0, 1)
+        else:
+            pred = ovo_vote(d, self.pairs_, len(self.classes_))
+        return self.classes_[pred]
+
+    def score(self, x: np.ndarray, y: np.ndarray) -> float:
+        return float(np.mean(self.predict(x) == np.asarray(y)))
+
+    def error(self, x: np.ndarray, y: np.ndarray) -> float:
+        return 1.0 - self.score(x, y)
+
+    # -------------------------------------------------------------- persistence
+    def save(self, directory: str) -> str:
+        """Persist the fitted model (landmarks + projector + per-pair weights).
+
+        Only stage-1 artifacts and the solution are stored — G itself is a
+        training-time object and is NOT persisted (it is n x B; the paper's
+        point is that it can always be recomputed from the landmarks).
+        """
+        if self.W_ is None:
+            raise RuntimeError("fit first")
+        from repro.checkpoint import save_checkpoint
+        tree = {
+            "landmarks": self.factor.landmarks,
+            "projector": self.factor.projector,
+            "eigvals": self.factor.eigvals,
+            "W": self.W_,
+            "classes": jnp.asarray(self.classes_),
+            "meta": {
+                "gamma": jnp.float32(self.kernel.gamma),
+                "coef0": jnp.float32(self.kernel.coef0),
+                "degree": jnp.int32(self.kernel.degree),
+                "C": jnp.float32(self.C),
+                "kind": jnp.int32(("rbf", "linear", "poly", "tanh")
+                                  .index(self.kernel.kind)),
+            },
+        }
+        return save_checkpoint(directory, 0, tree)
+
+    @classmethod
+    def load(cls, directory: str) -> "LPDSVM":
+        from repro.checkpoint import load_checkpoint
+        import msgpack  # noqa: F401  (checkpoint backend)
+        # build a template by reading shapes from the file
+        import os
+        path = os.path.join(directory, "step_00000000.msgpack")
+        with open(path, "rb") as f:
+            payload = msgpack.unpackb(f.read(), raw=False)
+
+        def arr(key):
+            rec = payload[key]
+            return jnp.asarray(np.frombuffer(rec["data"],
+                                             dtype=np.dtype(rec["dtype"]))
+                               .reshape(rec["shape"]))
+
+        kinds = ("rbf", "linear", "poly", "tanh")
+        kernel = KernelParams(
+            kind=kinds[int(arr("meta/kind"))],
+            gamma=float(arr("meta/gamma")),
+            coef0=float(arr("meta/coef0")),
+            degree=int(arr("meta/degree")),
+        )
+        svm = cls(kernel=kernel, C=float(arr("meta/C")))
+        landmarks = arr("landmarks")
+        projector = arr("projector")
+        from repro.core.nystrom import LowRankFactor
+        svm.factor = LowRankFactor(
+            G=jnp.zeros((0, projector.shape[1]), jnp.float32),
+            landmarks=landmarks, projector=projector,
+            eigvals=arr("eigvals"),
+            effective_rank=projector.shape[1], kernel=kernel)
+        svm.W_ = arr("W")
+        svm.classes_ = np.asarray(arr("classes"))
+        from repro.core.ovo import class_pairs
+        svm.pairs_ = class_pairs(len(svm.classes_))
+        return svm

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's two compute hot spots:
+
+  * gram.py — stage-1 batch kernel-matrix computation (paper: custom CUDA
+    kernels + cuBLAS) — MXU-tiled, VMEM-accumulated;
+  * smo.py  — stage-2 SMO epoch (paper: single-SM scratchpad loop) — w in a
+    persistent VMEM scratch, G streamed tile-by-tile.
+
+ops.py holds the jit'd padding/dispatch wrappers; ref.py the pure-jnp oracles.
+"""
+from repro.kernels.ops import flash_attention, gram, smo_epoch
+
+__all__ = ["flash_attention", "gram", "smo_epoch"]

@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels: padding, tiling, dispatch.
+
+On the CPU container the kernels execute with interpret=True (Python-level
+execution of the kernel body); on TPU they compile to Mosaic.  The wrappers
+make either path a drop-in replacement for the pure-jnp reference functions
+(`core.kernel_fn.gram`, `core.dual_solver.epoch_ref`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fn import KernelParams
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gram import gram_pallas
+from repro.kernels.smo import smo_epoch_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(a: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = a.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def gram(x: jnp.ndarray, z: jnp.ndarray, params: KernelParams, *,
+         tn: int = 128, tm: int = 128, tp: int = 512,
+         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Batch kernel matrix K(x, z) via the Pallas kernel, any shapes.
+
+    Zero-padding the feature axis is exact for every supported kernel (it adds
+    zero to the dot products and squared norms); padded rows/cols are sliced
+    off the output.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n, m = x.shape[0], z.shape[0]
+    x = _pad_axis(_pad_axis(jnp.asarray(x, jnp.float32), 1, tp), 0, tn)
+    z = _pad_axis(_pad_axis(jnp.asarray(z, jnp.float32), 1, tp), 0, tm)
+    out = gram_pallas(x, z, params, tn=tn, tm=tm, tp=tp, interpret=interpret)
+    return out[:n, :m]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
+                    bk: int = 256, interpret: Optional[bool] = None):
+    """Causal flash attention over (B, H, S, D) tensors (pads S to blocks).
+
+    On TPU this is the Mosaic kernel; off-TPU it interprets.  The jnp
+    two-level-chunked path in models/attention.py remains the default for
+    dry-run lowering; this entry point is for TPU deployment + validation.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, H, S, D = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    pad = (-S) % max(bq, bk)
+    flat = lambda a: _pad_axis(a.reshape(B * H, S, D), 1, max(bq, bk))
+    qf, kf, vf = flat(q), flat(k), flat(v)
+    if pad:  # padded kv rows must never win the softmax: mask via causal rows
+        assert causal, "padding currently supported for causal attention only"
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                                 interpret=interpret)
+    return out[:, :S].reshape(B, H, S, D)
+
+
+def smo_epoch(G, y, c, q, alpha, unchanged, w, *, full_pass: bool,
+              shrink_k: int = 5, tn: int = 256,
+              interpret: Optional[bool] = None):
+    """One shrinking-aware coordinate-ascent epoch (flat 1-D vectors in/out).
+
+    Row padding uses c = 0, which the kernel treats as inert, so results are
+    exact for any n.  Returns (alpha, unchanged, w, viol_scalar).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n = G.shape[0]
+    tn = min(tn, max(8, 1 << (n - 1).bit_length())) if n < tn else tn
+    Gp = _pad_axis(jnp.asarray(G, jnp.float32), 0, tn)
+    pad1 = lambda v, dt: _pad_axis(jnp.asarray(v, dt).reshape(-1, 1), 0, tn)
+    a, u, wv, viol = smo_epoch_pallas(
+        Gp, pad1(y, jnp.float32), pad1(c, jnp.float32), pad1(q, jnp.float32),
+        pad1(alpha, jnp.float32), pad1(unchanged, jnp.int32),
+        jnp.asarray(w, jnp.float32).reshape(1, -1),
+        full_pass=full_pass, shrink_k=shrink_k, tn=tn, interpret=interpret)
+    return a[:n, 0], u[:n, 0], wv[0], viol[0, 0]

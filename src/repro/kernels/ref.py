@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dual_solver import epoch_ref
+from repro.core.kernel_fn import KernelParams, gram as _gram_ref
+
+
+def gram_ref(x: jnp.ndarray, z: jnp.ndarray, params: KernelParams) -> jnp.ndarray:
+    """Oracle for kernels/gram.py — the stage-1 batch kernel matrix."""
+    return _gram_ref(x, z, params)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Oracle for kernels/flash_attention.py.  q/k/v (BH, S, D)."""
+    BH, S, D = q.shape
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def smo_epoch_ref(G, y, c, q, alpha, unchanged, w, *, full_pass: bool,
+                  shrink_k: int = 5):
+    """Oracle for kernels/smo.py — identical sequential semantics.
+
+    Same column-vector shapes as the kernel: y/c/q/alpha (n, 1), w (1, B).
+    Returns (alpha (n,1), unchanged (n,1), w (1,B), viol (1,1)).
+    """
+    n = G.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    a, wv, u, viol = epoch_ref(
+        G, idx, y[:, 0], c[:, 0], q[:, 0], alpha[:, 0], w[0], unchanged[:, 0],
+        shrink_k, jnp.bool_(full_pass))
+    return (a[:, None], u[:, None], wv[None, :],
+            jnp.asarray(viol, jnp.float32).reshape(1, 1))

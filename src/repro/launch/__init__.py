@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, sharded train/serve steps, dry-run."""

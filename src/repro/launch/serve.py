@@ -1,0 +1,68 @@
+"""Batched greedy serving driver (prefill-by-decode + generation loop).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --reduced --batch 4 --prompt-len 32 --gen 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import make_serve_step
+from repro.models import init_model, init_decode_state, prefill_cross_attention
+from repro.models import model as M
+
+
+def serve(arch: str, *, reduced: bool = True, batch: int = 4,
+          prompt_len: int = 32, gen: int = 32, seed: int = 0):
+    cfg = get_config(arch, reduced=reduced)
+    params, _ = init_model(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len))
+    kv_len = prompt_len + gen
+    enc_len = 16 if cfg.is_encoder_decoder else 0
+    state = init_decode_state(cfg, batch, kv_len, enc_len=enc_len)
+    if cfg.is_encoder_decoder:
+        frames = jnp.asarray(rng.normal(size=(batch, enc_len, cfg.d_model)),
+                             jnp.bfloat16)
+        memory = M._run_encoder(params, cfg, frames)
+        state = prefill_cross_attention(params, cfg, state, memory)
+
+    step = jax.jit(make_serve_step(cfg, global_batch=batch))
+    # prefill by sequential decode (cache building), then generate
+    t0 = time.time()
+    tok = None
+    for t in range(prompt_len):
+        tok, state = step(params, jnp.asarray(prompts[:, t:t + 1], jnp.int32),
+                          state, jnp.int32(t))
+    generated = []
+    for t in range(prompt_len, prompt_len + gen):
+        generated.append(np.asarray(tok)[:, 0])
+        tok, state = step(params, tok, state, jnp.int32(t))
+    dt = time.time() - t0
+    gen_arr = np.stack(generated, axis=1)
+    print(f"{arch}: generated {gen_arr.shape} in {dt:.2f}s "
+          f"({batch * (prompt_len + gen) / dt:.1f} tok/s incl. prefill)")
+    print("sample:", gen_arr[0][:16])
+    return gen_arr
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    serve(args.arch, reduced=args.reduced, batch=args.batch,
+          prompt_len=args.prompt_len, gen=args.gen)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""ShapeDtypeStruct input specs per (architecture x input shape x mesh).
+
+The dry-run never allocates: params, optimizer state, batches and KV caches
+are all `jax.ShapeDtypeStruct`s with `NamedSharding`s attached (weak-type
+correct, shardable, no device memory).
+
+Input shapes (assigned):
+    train_4k       seq  4,096   global_batch 256   train_step
+    prefill_32k    seq 32,768   global_batch  32   prefill_step
+    decode_32k     seq 32,768   global_batch 128   serve_step (full KV cache)
+    long_500k      seq 524,288  global_batch   1   serve_step (windowed cache /
+                                                   constant-size SSM state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.common import logical_to_physical, spec_tree_to_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str             # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_entry(mesh: Mesh, batch: int):
+    """PartitionSpec ENTRY for the batch dim: axis tuple, or None (replicate)
+    when the batch does not divide the batch-axes product (e.g. B=1)."""
+    import math
+    axes = _batch_axes(mesh)
+    n = math.prod(mesh.shape[a] for a in axes)
+    return axes if batch % n == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Dict:
+    """Training / prefill batch ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    b = batch_entry(mesh, B)
+    out = {"tokens": _sds((B, S), jnp.int32, mesh, P(b, None))}
+    if shape.mode == "train":
+        out["targets"] = _sds((B, S), jnp.int32, mesh, P(b, None))
+    if cfg.modality == "vision":
+        out["prefix"] = _sds((B, cfg.num_prefix_embeddings, cfg.d_model),
+                             jnp.bfloat16, mesh, P(b, None, None))
+    if cfg.is_encoder_decoder:
+        out["frames"] = _sds((B, cfg.num_prefix_embeddings, cfg.d_model),
+                             jnp.bfloat16, mesh, P(b, None, None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# params + optimizer state
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, mesh: Mesh):
+    """(param SDS tree with shardings, logical spec tree)."""
+    box = {}
+
+    def build(k):
+        p, s = M.init_model(k, cfg)
+        box["specs"] = s          # spec tree is static (strings) — side-channel
+        return p
+
+    params_shape = jax.eval_shape(build, jax.random.PRNGKey(0))
+    specs = box["specs"]
+    shardings = spec_tree_to_shardings(specs, mesh, shape_tree=params_shape)
+    sds = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        params_shape, shardings)
+    return sds, specs
+
+
+def opt_state_specs(optimizer, params_sds):
+    """Optimizer-state SDS tree; states inherit parameter shardings where
+    shapes match, replicated otherwise (adafactor's factored vectors)."""
+    state_shape = jax.eval_shape(optimizer.init, params_sds)
+
+    param_leaves = jax.tree.leaves(params_sds)
+    shard_by_shape = {}
+    for leaf in param_leaves:
+        shard_by_shape.setdefault((leaf.shape, ()), leaf.sharding)
+        shard_by_shape[leaf.shape] = leaf.sharding
+
+    mesh = param_leaves[0].sharding.mesh
+
+    def assign(a):
+        sh = shard_by_shape.get(a.shape)
+        if sh is None:
+            sh = NamedSharding(mesh, P())
+        return jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=sh)
+
+    return jax.tree.map(assign, state_shape)
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+def decode_kv_len(cfg: ModelConfig, shape: InputShape) -> int:
+    if shape.seq_len <= 32768:
+        return shape.seq_len
+    # long_500k: sub-quadratic only — windowed cache (or SSM state)
+    if cfg.decode_window:
+        return cfg.decode_window
+    if cfg.arch_type == "ssm":
+        return 8      # unused dummy (no attention layers)
+    raise ValueError(f"{cfg.name}: long_500k needs decode_window or SSM")
+
+
+def decode_state_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """SDS tree for the decode cache, sharded per DESIGN.md rules."""
+    B = shape.global_batch
+    kv_len = decode_kv_len(cfg, shape)
+    enc_len = cfg.num_prefix_embeddings if cfg.is_encoder_decoder else 0
+    state_shape = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, B, kv_len, enc_len=enc_len))
+
+    m_size = mesh.shape["model"]
+    bspec = batch_entry(mesh, B)
+    heads_ok = cfg.n_kv_heads > 0 and cfg.n_kv_heads % m_size == 0
+    seq_ok = kv_len % m_size == 0
+    rwkv_heads = (cfg.d_model // cfg.ssm_head_dim) if cfg.ssm_kind == "rwkv6" else 0
+    inner_ok = (cfg.d_model * cfg.ssm_expand) % m_size == 0
+
+    def spec_for(path, a) -> P:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        stacked = any(getattr(p, "key", None) == "groups" for p in path)
+        lead = (None,) if stacked else ()
+
+        def mk(*rest):
+            return P(*(lead + rest))
+
+        if name in ("k", "v"):
+            if cfg.attention != "mla" and heads_ok:
+                return mk(bspec, None, "model", None)
+            return mk(bspec, "model" if seq_ok else None, None, None)
+        if name in ("xk", "xv"):
+            ok = cfg.n_kv_heads % m_size == 0
+            return mk(bspec, None, "model" if ok else None, None)
+        if name in ("ckv", "kr"):
+            return mk(bspec, "model" if seq_ok else None, None)
+        if name == "pos":
+            return mk(None)
+        if name == "S":
+            ok = rwkv_heads and rwkv_heads % m_size == 0
+            return mk(bspec, "model" if ok else None, None, None)
+        if name == "x_prev":
+            return mk(bspec, None, None)
+        if name == "h":
+            return mk(bspec, "model" if inner_ok else None, None)
+        if name == "conv":
+            return mk(bspec, None, "model" if inner_ok else None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, a: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=NamedSharding(mesh, spec_for(path, a))),
+        state_shape)
+
+
+def serve_input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Dict:
+    B = shape.global_batch
+    b = batch_entry(mesh, B)
+    return {
+        "tokens": _sds((B, 1), jnp.int32, mesh, P(b, None)),
+        "state": decode_state_specs(cfg, shape, mesh),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P())),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Dict:
+    """All model inputs for the given shape (excluding params/opt state)."""
+    if shape.mode == "decode":
+        return serve_input_specs(cfg, shape, mesh)
+    return batch_specs(cfg, shape, mesh)

@@ -1,0 +1,98 @@
+"""Sharded train / prefill / serve step factories.
+
+Each factory closes over (cfg, mesh) and returns a function suitable both for
+real execution (examples, tests on the host mesh) and for `.lower(...SDS...)`
+in the dry-run.  MoE strategy selection:
+
+    train / prefill on a >1 "model" mesh  -> "a2a"  (expert-parallel all_to_all,
+                                             tokens resharded over data x model)
+    decode on a mesh                      -> "replicated" (tokens tiny: keep
+                                             experts put, psum over "model")
+    no mesh / 1-device mesh               -> "local" ragged_dot
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.specs import InputShape, batch_entry
+from repro.models import model as M
+
+
+def _moe_plan(cfg: ModelConfig, mesh: Optional[Mesh], mode: str, batch: int,
+              decode_strategy: str = "replicated_psum"):
+    """(strategy, token_spec) for the MoE layers.
+
+    decode_strategy: "replicated_psum" (default — tokens gathered, weights
+    stay put; §Perf hillclimb #2) or "replicated" (paper-of-record baseline
+    that all-gathers expert weights over the FSDP axis).
+    """
+    if (mesh is None or cfg.n_experts == 0 or "model" not in mesh.axis_names
+            or mesh.shape["model"] == 1
+            or cfg.n_experts % mesh.shape["model"] != 0):
+        return "local", None
+    if mode in ("train", "prefill"):
+        axes = tuple(a for a in mesh.axis_names)
+        return "a2a", P(axes, None)
+    b = batch_entry(mesh, batch)
+    return decode_strategy, P(b, None)
+
+
+def make_train_step(cfg: ModelConfig, optimizer, mesh: Optional[Mesh] = None,
+                    *, global_batch: int = 0, remat: bool = True,
+                    unroll: bool = False):
+    prefix = cfg.num_prefix_embeddings if cfg.modality == "vision" else 0
+    strategy, token_spec = _moe_plan(cfg, mesh, "train", global_batch)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux = M.forward(p, cfg, batch, moe_strategy=strategy,
+                                    token_spec=token_spec, remat=remat,
+                                    unroll=unroll)
+            loss = M.lm_loss(logits, batch["targets"], prefix_len=prefix)
+            return loss + cfg.router_aux_coef * aux, (loss, aux)
+
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, "aux": aux, "total": total}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                      *, global_batch: int = 0, unroll: bool = False):
+    strategy, token_spec = _moe_plan(cfg, mesh, "prefill", global_batch)
+
+    def prefill_step(params, batch):
+        logits, _ = M.forward(params, cfg, batch, moe_strategy=strategy,
+                              token_spec=token_spec, remat=False,
+                              unroll=unroll)
+        # serving prefill: next-token logits for the last position
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                    *, global_batch: int = 0, greedy: bool = True,
+                    unroll: bool = False,
+                    moe_decode: str = "replicated_psum"):
+    strategy, token_spec = _moe_plan(cfg, mesh, "decode", global_batch,
+                                     decode_strategy=moe_decode)
+
+    def serve_step(params, tokens, state, pos):
+        logits, state = M.decode(params, cfg, tokens, state, pos,
+                                 moe_strategy=strategy, token_spec=token_spec,
+                                 unroll=unroll)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, state
+
+    return serve_step

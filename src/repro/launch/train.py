@@ -1,0 +1,78 @@
+"""LM training driver (runs for real on the host; e2e example substrate).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+        --steps 200 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.data import synthetic_token_batches
+from repro.launch.steps import make_train_step
+from repro.models import init_model
+from repro.optim import cosine_schedule, get_optimizer
+
+
+def train(arch: str, *, reduced: bool = True, steps: int = 100, batch: int = 8,
+          seq: int = 256, lr: float = 3e-4, seed: int = 0,
+          ckpt_dir: str = None, log_every: int = 10):
+    cfg = get_config(arch, reduced=reduced)
+    params, _ = init_model(jax.random.PRNGKey(seed), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    opt = get_optimizer(cfg.optimizer, lr=lr,
+                        schedule=cosine_schedule(lr, steps // 10, steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, global_batch=batch))
+
+    it = synthetic_token_batches(cfg.vocab_size, batch, seq, seed=seed)
+    rng = np.random.default_rng(seed)
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        tokens, targets = next(it)
+        b = {"tokens": jnp.asarray(tokens), "targets": jnp.asarray(targets)}
+        if cfg.modality == "vision":
+            b["prefix"] = jnp.asarray(
+                rng.normal(size=(batch, cfg.num_prefix_embeddings,
+                                 cfg.d_model)), jnp.bfloat16)
+        if cfg.is_encoder_decoder:
+            b["frames"] = jnp.asarray(
+                rng.normal(size=(batch, 32, cfg.d_model)), jnp.bfloat16)
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        losses.append(float(metrics["loss"]))
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.time() - t0
+            tps = (step + 1) * batch * seq / dt
+            print(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                  f"tok/s {tps:,.0f}", flush=True)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, {"params": params})
+        print(f"checkpoint -> {ckpt_dir}")
+    print(f"params: {n_params/1e6:.1f}M  first loss {losses[0]:.4f}  "
+          f"final loss {losses[-1]:.4f}")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    train(args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
+          seq=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

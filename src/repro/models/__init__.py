@@ -1,0 +1,11 @@
+"""Assigned-architecture model zoo (pure-JAX, dict-pytree parameters)."""
+from repro.models.model import (init_model, forward, decode,
+                                init_decode_state, prefill_cross_attention,
+                                lm_loss)
+from repro.models.common import spec_tree_to_shardings, logical_to_physical
+
+__all__ = [
+    "init_model", "forward", "decode", "init_decode_state",
+    "prefill_cross_attention", "lm_loss",
+    "spec_tree_to_shardings", "logical_to_physical",
+]

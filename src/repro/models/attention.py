@@ -1,0 +1,353 @@
+"""Attention mixers: GQA (with qk-norm / sliding window / biases) and MLA.
+
+Three execution paths, all sharing weights:
+
+  * `attend_full`  — training / prefill over a whole sequence.  Flash-style
+    online-softmax accumulation over KV chunks (lax.scan) so the S x S logits
+    matrix never materializes (peak transient is (B, H, S_q, kv_chunk));
+  * `decode_step`  — one token against a (possibly rolling sliding-window) KV
+    cache.  Plain attention: S_q = 1 logits are tiny, and keeping the cache
+    un-chunked lets GSPMD shard the cache sequence axis over "model" and turn
+    the softmax reductions into all-reduces (distributed flash-decode);
+  * MLA decode uses the *absorbed* form: w_uk is folded into the query and
+    w_uv into the output so only the latent c_kv (kv_lora + rope dims) is
+    cached and attended — the whole point of MLA's small cache.
+
+Sharding (logical): batch -> "batch", heads -> "tp".  KV caches shard the kv
+head axis over "tp" when divisible, else the sequence axis (launch/steps.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (apply_rotary, dense_init, rms_norm,
+                                 rotary_cos_sin, shard, zeros_init)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig, dtype) -> Tuple[Dict, Dict]:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], (d, H * hd), ("fsdp", "tp"), dtype)
+    p["wk"], s["wk"] = dense_init(ks[1], (d, Hkv * hd), ("fsdp", "tp"), dtype)
+    p["wv"], s["wv"] = dense_init(ks[2], (d, Hkv * hd), ("fsdp", "tp"), dtype)
+    p["wo"], s["wo"] = dense_init(ks[3], (H * hd, d), ("tp", "fsdp"), dtype)
+    if cfg.qkv_bias:
+        for nm, width in (("bq", H * hd), ("bk", Hkv * hd), ("bv", Hkv * hd)):
+            p[nm], s[nm] = zeros_init((width,), ("tp",), dtype)
+    if cfg.qk_norm:
+        p["q_norm"], s["q_norm"] = jnp.ones((hd,), dtype), (None,)
+        p["k_norm"], s["k_norm"] = jnp.ones((hd,), dtype), (None,)
+    return p, s
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> Tuple[Dict, Dict]:
+    d, H = cfg.d_model, cfg.n_heads
+    hd, vhd, r = cfg.resolved_head_dim, cfg.resolved_v_head_dim, cfg.rope_head_dim
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    q_in = cfg.q_lora_rank if cfg.q_lora_rank else d
+    if cfg.q_lora_rank:
+        p["w_dq"], s["w_dq"] = dense_init(ks[0], (d, cfg.q_lora_rank), ("fsdp", None), dtype)
+        p["q_ln"], s["q_ln"] = jnp.ones((cfg.q_lora_rank,), dtype), (None,)
+    p["w_uq"], s["w_uq"] = dense_init(ks[1], (q_in, H * (hd + r)), ("fsdp", "tp"), dtype)
+    p["w_dkv"], s["w_dkv"] = dense_init(ks[2], (d, cfg.kv_lora_rank), ("fsdp", None), dtype)
+    p["kv_ln"], s["kv_ln"] = jnp.ones((cfg.kv_lora_rank,), dtype), (None,)
+    p["w_kr"], s["w_kr"] = dense_init(ks[3], (d, r), ("fsdp", None), dtype)
+    p["w_ukv"], s["w_ukv"] = dense_init(
+        ks[4], (cfg.kv_lora_rank, H * (hd + vhd)), ("fsdp", "tp"), dtype)
+    p["wo"], s["wo"] = dense_init(ks[5], (H * vhd, d), ("tp", "fsdp"), dtype)
+    return p, s
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    if cfg.attention == "mla":
+        return init_mla(key, cfg, dtype)
+    return init_gqa(key, cfg, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash-style chunked attention core (full-sequence paths)
+# ---------------------------------------------------------------------------
+
+# Dry-run cost probes set these to huge values so the online-softmax scans
+# have a single iteration (XLA cost analysis counts scan bodies once).
+FLASH_KV_CHUNK = 1024
+FLASH_Q_CHUNK = 512
+
+
+def _flash(q, k, v, q_pos, kv_pos, *, causal: bool, window: int,
+           kv_chunk: Optional[int] = None, q_chunk: Optional[int] = None):
+    """Online-softmax attention, chunked over BOTH query and kv axes.
+
+    q: (B, Sq, Hkv, G, hd)   grouped queries (G = H / Hkv)
+    k: (B, Skv, Hkv, hd)     v: (B, Skv, Hkv, vhd)
+    q_pos: (Sq,), kv_pos: (Skv,) int32 (-1 marks invalid kv slots)
+
+    Peak temp per device is one (B, H, q_chunk, kv_chunk) float32 logits
+    block; both scan bodies are remat'd, so the backward recomputes logits
+    per block instead of saving them — the flash-attention trade in jnp.
+    (The Pallas flash kernel is the TPU-native version of exactly this
+    blocking; the jnp form is what the dry-run lowers.)
+    """
+    B, Sq, Hkv, G, hd = q.shape
+    vhd = v.shape[-1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    Skv = k.shape[1]
+    def _divisor_chunk(S, target):
+        """Largest divisor of S that is <= target (handles VLM's 4672 etc.)."""
+        c = min(target, S)
+        while S % c:
+            c -= 1
+        return c
+
+    kv_chunk = _divisor_chunk(Skv, kv_chunk if kv_chunk is not None
+                              else FLASH_KV_CHUNK)
+    q_chunk = _divisor_chunk(Sq, q_chunk if q_chunk is not None
+                             else FLASH_Q_CHUNK)
+    n_kv = Skv // kv_chunk
+    n_q = Sq // q_chunk
+
+    kc = k.reshape(B, n_kv, kv_chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_kv, kv_chunk, Hkv, vhd).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(n_kv, kv_chunk)
+    qc = q.reshape(B, n_q, q_chunk, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qpc = q_pos.reshape(n_q, q_chunk)
+
+    def q_step(_, q_inp):
+        q_blk, qp_blk = q_inp                        # (B, qc, Hkv, G, hd)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            k_blk, v_blk, p_blk = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            mask = p_blk[None, :] >= 0                               # valid
+            if causal:
+                mask = jnp.logical_and(mask, qp_blk[:, None] >= p_blk[None, :])
+            if window > 0:
+                mask = jnp.logical_and(mask,
+                                       qp_blk[:, None] - p_blk[None, :] < window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, vhd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      (kc, vc, pc))
+        out = acc / jnp.maximum(l, 1e-30)            # (B, Hkv, G, qc, vhd)
+        return None, out.astype(v.dtype)
+
+    if n_q == 1:
+        _, outs = q_step(None, (qc[0], qpc[0]))
+        out = outs[None]
+    else:
+        _, outs = jax.lax.scan(jax.checkpoint(q_step), None, (qc, qpc))
+        out = outs                                   # (n_q, B, Hkv, G, qc, vhd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hkv, G, vhd)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def _qkv(params, cfg: ModelConfig, x):
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, Hkv, H // Hkv, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_full(params, cfg: ModelConfig, x, positions, *, causal=True,
+             window: int = 0):
+    """Training / prefill.  x (B, S, d); positions (S,)."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(params, cfg, x)
+    cos, sin = rotary_cos_sin(positions, hd, cfg.rope_theta)
+    q = apply_rotary(q, cos[None, :, None, None], sin[None, :, None, None])
+    k = apply_rotary(k, cos[None, :, None], sin[None, :, None])
+    q = shard(q, "batch", None, "tp", None, None)
+    k = shard(k, "batch", None, "tp", None)
+    out = _flash(q, k, v, positions, positions, causal=causal, window=window)
+    out = out.reshape(B, S, H * hd).astype(x.dtype)
+    return out @ params["wo"]
+
+
+def gqa_decode(params, cfg: ModelConfig, x, cache, pos):
+    """One token.  x (B, 1, d); cache {k, v: (B, W, Hkv, hd), pos: (W,)}."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    W = cache["k"].shape[1]
+    q, k_new, v_new = _qkv(params, cfg, x)
+    cos, sin = rotary_cos_sin(pos[None], hd, cfg.rope_theta)
+    q = apply_rotary(q, cos[None, :, None, None], sin[None, :, None, None])
+    k_new = apply_rotary(k_new, cos[None, :, None], sin[None, :, None])
+
+    slot = pos % W
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    kv_pos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.logical_and(kv_pos >= 0, kv_pos <= pos)
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return out @ params["wo"], {"k": k, "v": v, "pos": kv_pos}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def _mla_q(params, cfg: ModelConfig, x):
+    H, hd, r = cfg.n_heads, cfg.resolved_head_dim, cfg.rope_head_dim
+    B, S, _ = x.shape
+    h = x
+    if cfg.q_lora_rank:
+        h = rms_norm(x @ params["w_dq"], params["q_ln"], cfg.norm_eps)
+    q = (h @ params["w_uq"]).reshape(B, S, H, hd + r)
+    return q[..., :hd], q[..., hd:]          # q_nope, q_rope
+
+
+def _mla_latent(params, cfg: ModelConfig, x, positions):
+    c_kv = rms_norm(x @ params["w_dkv"], params["kv_ln"], cfg.norm_eps)
+    k_r = x @ params["w_kr"]                                    # (B, S, r)
+    cos, sin = rotary_cos_sin(positions, cfg.rope_head_dim, cfg.rope_theta)
+    k_r = apply_rotary(k_r, cos[None], sin[None])
+    return c_kv, k_r
+
+
+def mla_full(params, cfg: ModelConfig, x, positions, *, causal=True,
+             window: int = 0):
+    """Training / prefill: materialize per-head k/v from the latent."""
+    B, S, _ = x.shape
+    H, hd, vhd, r = (cfg.n_heads, cfg.resolved_head_dim,
+                     cfg.resolved_v_head_dim, cfg.rope_head_dim)
+    q_nope, q_rope = _mla_q(params, cfg, x)
+    cos, sin = rotary_cos_sin(positions, r, cfg.rope_theta)
+    q_rope = apply_rotary(q_rope, cos[None, :, None], sin[None, :, None])
+    c_kv, k_r = _mla_latent(params, cfg, x, positions)
+    kv = (c_kv @ params["w_ukv"]).reshape(B, S, H, hd + vhd)
+    k_nope, v = kv[..., :hd], kv[..., hd:]
+    # fold the shared rope key into per-head keys: concat along feature dim
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]  # Hkv=H,G=1
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_r[:, :, None, :],
+                                                  (B, S, H, r))], axis=-1)
+    q = shard(q, "batch", None, "tp", None, None)
+    k = shard(k, "batch", None, "tp", None)
+    out = _flash(q, k, v, positions, positions, causal=causal, window=window)
+    out = out.reshape(B, S, H * vhd).astype(x.dtype)
+    return out @ params["wo"]
+
+
+def mla_decode(params, cfg: ModelConfig, x, cache, pos):
+    """Absorbed-matrix decode over the latent cache.
+
+    cache: {ckv: (B, W, kv_lora), kr: (B, W, r), pos: (W,)}
+    q_eff[h] = q_nope[h] @ w_uk[h]^T  -> attends c_kv directly;
+    out[h]   = (attn @ c_kv) @ w_uv[h].
+    """
+    B = x.shape[0]
+    H, hd, vhd, r = (cfg.n_heads, cfg.resolved_head_dim,
+                     cfg.resolved_v_head_dim, cfg.rope_head_dim)
+    L = cfg.kv_lora_rank
+    W = cache["ckv"].shape[1]
+    q_nope, q_rope = _mla_q(params, cfg, x)                     # (B,1,H,·)
+    cos, sin = rotary_cos_sin(pos[None], r, cfg.rope_theta)
+    q_rope = apply_rotary(q_rope, cos[None, :, None], sin[None, :, None])
+    c_new, kr_new = _mla_latent(params, cfg, x, pos[None])
+
+    slot = pos % W
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"],
+                                       c_new.astype(cache["ckv"].dtype),
+                                       (0, slot, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"],
+                                      kr_new.astype(cache["kr"].dtype),
+                                      (0, slot, 0))
+    kv_pos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+
+    w_ukv = params["w_ukv"].reshape(L, H, hd + vhd)
+    w_uk, w_uv = w_ukv[..., :hd], w_ukv[..., hd:]
+    # absorb: (B,1,H,hd) x (L,H,hd) -> (B,1,H,L)
+    q_eff = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(hd + r).astype(jnp.float32)
+    s = (jnp.einsum("bqhl,bkl->bhqk", q_eff, ckv.astype(jnp.float32))
+         + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * scale
+    mask = jnp.logical_and(kv_pos >= 0, kv_pos <= pos)
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    lat = jnp.einsum("bhqk,bkl->bqhl", p, ckv.astype(jnp.float32))
+    out = jnp.einsum("bqhl,lhv->bqhv", lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * vhd).astype(x.dtype)
+    return out @ params["wo"], {"ckv": ckv, "kr": kr, "pos": kv_pos}
+
+
+# ---------------------------------------------------------------------------
+# dispatch + cache builders
+# ---------------------------------------------------------------------------
+
+def attend_full(params, cfg: ModelConfig, x, positions, *, causal=True,
+                window: int = 0):
+    if cfg.attention == "mla":
+        return mla_full(params, cfg, x, positions, causal=causal, window=window)
+    return gqa_full(params, cfg, x, positions, causal=causal, window=window)
+
+
+def decode_step(params, cfg: ModelConfig, x, cache, pos):
+    if cfg.attention == "mla":
+        return mla_decode(params, cfg, x, cache, pos)
+    return gqa_decode(params, cfg, x, cache, pos)
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int, dtype=jnp.bfloat16):
+    """Empty KV cache for one attention layer (length = S or decode_window)."""
+    if cfg.attention == "mla":
+        return {
+            "ckv": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, length, cfg.rope_head_dim), dtype),
+            "pos": jnp.full((length,), -1, jnp.int32),
+        }
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),
+    }

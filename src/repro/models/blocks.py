@@ -1,0 +1,189 @@
+"""Decoder/encoder layer assembly: mixer (attn | ssm) + FFN (dense | MoE).
+
+Pre-norm residual blocks.  Layer kinds are fully determined by the config
+(`cfg.layer_kind(i)`, `cfg.layer_is_moe(i)`), so periodic stacks (jamba's
+1-attention-in-8, MoE-every-other-layer) scan over layer groups of
+lcm(attn_period, moe_period) layers (model.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import activation, dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# dense FFN
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int, dtype) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    if cfg.act in ("silu", "gelu"):
+        p["w_gate"], s["w_gate"] = dense_init(ks[0], (d, d_ff), ("fsdp", "tp"), dtype)
+        p["w_up"], s["w_up"] = dense_init(ks[1], (d, d_ff), ("fsdp", "tp"), dtype)
+        p["w_down"], s["w_down"] = dense_init(ks[2], (d_ff, d), ("tp", "fsdp"), dtype)
+    else:  # relu2: non-gated
+        p["w_in"], s["w_in"] = dense_init(ks[0], (d, d_ff), ("fsdp", "tp"), dtype)
+        p["w_down"], s["w_down"] = dense_init(ks[2], (d_ff, d), ("tp", "fsdp"), dtype)
+    return p, s
+
+
+def apply_ffn(params, cfg: ModelConfig, x):
+    act = activation(cfg.act)
+    if cfg.act in ("silu", "gelu"):
+        g = x @ params["w_gate"]
+        u = x @ params["w_up"]
+        h = (act(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = act((x @ params["w_in"]).astype(jnp.float32)).astype(x.dtype)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# one decoder layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, i: int, dtype, *,
+               with_cross: bool = False) -> Tuple[Dict, Dict]:
+    kind = cfg.layer_kind(i)
+    is_moe = cfg.layer_is_moe(i)
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = jnp.ones((cfg.d_model,), dtype), (None,)
+    if kind == "attn":
+        p["mixer"], s["mixer"] = attn.init_attention(ks[0], cfg, dtype)
+    elif cfg.ssm_kind == "rwkv6":
+        p["mixer"], s["mixer"] = ssm_mod.init_rwkv6(ks[0], cfg, dtype)
+    else:
+        p["mixer"], s["mixer"] = ssm_mod.init_mamba(ks[0], cfg, dtype)
+    if with_cross:
+        p["ln_x"], s["ln_x"] = jnp.ones((cfg.d_model,), dtype), (None,)
+        p["cross"], s["cross"] = attn.init_gqa(ks[2], cfg, dtype)
+    p["ln2"], s["ln2"] = jnp.ones((cfg.d_model,), dtype), (None,)
+    if is_moe:
+        p["ffn"], s["ffn"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"], s["ffn"] = init_ffn(ks[1], cfg, cfg.d_ff, dtype)
+    return p, s
+
+
+def _cross_attend_full(params, cfg: ModelConfig, x, memory):
+    """Cross-attention (no rope, not causal).  memory (B, S_enc, d)."""
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, S, Hkv, H // Hkv, hd)
+    k = (memory @ params["wk"]).reshape(B, -1, Hkv, hd)
+    v = (memory @ params["wv"]).reshape(B, -1, Hkv, hd)
+    S_enc = k.shape[1]
+    q_pos = jnp.arange(S)
+    kv_pos = jnp.arange(S_enc)
+    out = attn._flash(q, k, v, q_pos, kv_pos, causal=False, window=0)
+    return out.reshape(B, S, H * hd).astype(x.dtype) @ params["wo"]
+
+
+def _cross_attend_cached(params, cfg: ModelConfig, x, xk, xv):
+    """Decode-time cross-attention against precomputed memory k/v."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, 1, Hkv, H // Hkv, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   xk.astype(jnp.float32)) / jnp.sqrt(hd)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, xv.astype(jnp.float32))
+    return out.reshape(B, 1, H * hd).astype(x.dtype) @ params["wo"]
+
+
+def apply_layer_full(params, cfg: ModelConfig, i: int, x, positions, *,
+                     causal: bool = True, memory=None,
+                     moe_strategy: str = "local", token_spec=None):
+    """Training / prefill path.  Returns (x, aux_loss)."""
+    kind = cfg.layer_kind(i)
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        mix = attn.attend_full(params["mixer"], cfg, h, positions,
+                               causal=causal, window=cfg.sliding_window)
+    elif cfg.ssm_kind == "rwkv6":
+        mix = ssm_mod.rwkv6_mix(params["mixer"], cfg, h)
+    else:
+        mix = ssm_mod.mamba_mix(params["mixer"], cfg, h)
+    x = x + mix
+    if memory is not None and "cross" in params:
+        hx = rms_norm(x, params["ln_x"], cfg.norm_eps)
+        x = x + _cross_attend_full(params["cross"], cfg, hx, memory)
+    h2 = rms_norm(x, params["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if cfg.layer_is_moe(i):
+        B, S, d = h2.shape
+        flat = h2.reshape(B * S, d)
+        out, aux = moe_mod.moe_ffn(params["ffn"], cfg, flat,
+                                   activation(cfg.act),
+                                   strategy=moe_strategy,
+                                   token_spec=token_spec)
+        out = out.reshape(B, S, d)
+        if cfg.n_shared_experts:
+            out = out + moe_mod.shared_expert_ffn(params["ffn"], cfg, h2,
+                                                  activation(cfg.act))
+    else:
+        out = apply_ffn(params["ffn"], cfg, h2)
+    return x + out, aux
+
+
+def apply_layer_decode(params, cfg: ModelConfig, i: int, x, cache, pos, *,
+                       moe_strategy: str = "local", token_spec=None):
+    """One-token decode.  cache is this layer's state dict."""
+    kind = cfg.layer_kind(i)
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    new_cache = dict(cache)
+    if kind == "attn":
+        mix, upd = attn.decode_step(params["mixer"], cfg, h, cache["kv"], pos)
+        new_cache["kv"] = upd
+    elif cfg.ssm_kind == "rwkv6":
+        mix, upd = ssm_mod.rwkv6_decode(params["mixer"], cfg, h, cache["ssm"])
+        new_cache["ssm"] = upd
+    else:
+        mix, upd = ssm_mod.mamba_decode(params["mixer"], cfg, h, cache["ssm"])
+        new_cache["ssm"] = upd
+    x = x + mix
+    if "cross" in params and "xk" in cache:
+        hx = rms_norm(x, params["ln_x"], cfg.norm_eps)
+        x = x + _cross_attend_cached(params["cross"], cfg, hx,
+                                     cache["xk"], cache["xv"])
+    h2 = rms_norm(x, params["ln2"], cfg.norm_eps)
+    if cfg.layer_is_moe(i):
+        B, S, d = h2.shape
+        out, _ = moe_mod.moe_ffn(params["ffn"], cfg, h2.reshape(B * S, d),
+                                 activation(cfg.act), strategy=moe_strategy,
+                                 token_spec=token_spec)
+        out = out.reshape(B, S, d)
+        if cfg.n_shared_experts:
+            out = out + moe_mod.shared_expert_ffn(params["ffn"], cfg, h2,
+                                                  activation(cfg.act))
+    else:
+        out = apply_ffn(params["ffn"], cfg, h2)
+    return x + out, new_cache
+
+
+def init_layer_cache(cfg: ModelConfig, i: int, batch: int, kv_len: int,
+                     dtype=jnp.bfloat16, *, enc_len: int = 0):
+    """Decode cache for layer i: KV cache / ssm state (+ cross-attn kv)."""
+    cache = {}
+    if cfg.layer_kind(i) == "attn":
+        cache["kv"] = attn.init_cache(cfg, batch, kv_len, dtype)
+    elif cfg.ssm_kind == "rwkv6":
+        cache["ssm"] = ssm_mod.init_rwkv6_state(cfg, batch, dtype)
+    else:
+        cache["ssm"] = ssm_mod.init_mamba_state(cfg, batch, dtype)
+    if enc_len and cfg.is_encoder_decoder:
+        hd = cfg.resolved_head_dim
+        cache["xk"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype)
+        cache["xv"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype)
+    return cache

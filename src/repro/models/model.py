@@ -1,0 +1,343 @@
+"""Full model assembly: decoder-only LM, encoder-decoder, VLM/audio prefixes.
+
+Layer stacking uses `jax.lax.scan` over *layer groups* so 60-layer models
+produce compact HLO: a group is lcm(attn_layer_period, moe_layer_period)
+layers (jamba: 8, everything else: 1); `first_dense_layers` (deepseek/kimi)
+run unscanned as a prologue.  Every layer is wrapped in `jax.checkpoint`
+(full remat) during training.
+
+Public entry points (all pure functions over a params pytree):
+
+    init_model(key, cfg)                  -> (params, logical spec tree)
+    forward(params, cfg, batch, mode)     -> (logits, aux_loss)   # train/prefill
+    init_decode_state(params, cfg, ...)   -> cache pytree
+    decode(params, cfg, tokens, cache, pos) -> (logits, cache)    # one token
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import blocks
+from repro.models.common import embed_init, rms_norm, shard
+
+
+def _group_size(cfg: ModelConfig) -> int:
+    g = 1
+    if cfg.attn_layer_period:
+        g = cfg.attn_layer_period
+    if cfg.n_experts and cfg.moe_layer_period > 1:
+        g = math.lcm(g, cfg.moe_layer_period)
+    return g
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_prologue, group, n_groups); prologue absorbs non-periodic leftovers."""
+    g = _group_size(cfg)
+    pro = cfg.first_dense_layers
+    rem = cfg.n_layers - pro
+    n_groups = rem // g
+    pro += rem - n_groups * g          # leftovers join the prologue
+    return pro, g, n_groups
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Pad the vocab to a shardable size (Megatron-style).
+
+    seamless's 256,206 does not divide the 16-way "model" axis, which forces
+    the (B, S, V) logits (and every CE temporary) to replicate — 67 GiB/device
+    at prefill_32k.  Padding to a multiple of 512 costs <0.2% embed rows; the
+    padded logits are masked to -inf in forward/decode.
+    """
+    V = cfg.vocab_size
+    return V if V % 512 == 0 or V % 16 == 0 else -(-V // 512) * 512
+
+
+def _mask_padded_logits(cfg: ModelConfig, logits):
+    V = cfg.vocab_size
+    if logits.shape[-1] == V:
+        return logits
+    keep = jnp.arange(logits.shape[-1]) < V
+    return jnp.where(keep, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, cfg.n_layers + cfg.n_encoder_layers + 4)
+    params: Dict = {}
+    specs: Dict = {}
+    Vp = padded_vocab(cfg)
+    params["embed"], specs["embed"] = embed_init(keys[0], Vp,
+                                                 cfg.d_model, dtype=dtype)
+    params["final_ln"] = jnp.ones((cfg.d_model,), dtype)
+    specs["final_ln"] = (None,)
+    if not cfg.tie_embeddings:
+        params["unembed"], specs["unembed"] = embed_init(
+            keys[1], Vp, cfg.d_model, spec=("tp", "fsdp"), dtype=dtype)
+
+    with_cross = cfg.is_encoder_decoder
+    pro, g, n_groups = _layout(cfg)
+
+    params["prologue"], specs["prologue"] = [], []
+    for i in range(pro):
+        p, s = blocks.init_layer(keys[2 + i], cfg, i, dtype, with_cross=with_cross)
+        params["prologue"].append(p)
+        specs["prologue"].append(s)
+
+    group_p, group_s = [], []
+    for gi in range(n_groups):
+        ps, ss = [], []
+        for j in range(g):
+            i = pro + gi * g + j
+            p, s = blocks.init_layer(keys[2 + i], cfg, i, dtype,
+                                     with_cross=with_cross)
+            ps.append(p)
+            ss.append(s)
+        group_p.append(ps)
+        group_s.append(ss)
+    if n_groups:
+        # stack over groups: list[groups] of list[g] of dict -> list[g] of
+        # stacked dicts with leading (n_groups,) axis
+        params["groups"] = [_stack([group_p[gi][j] for gi in range(n_groups)])
+                            for j in range(g)]
+        specs["groups"] = [jax.tree.map(
+            lambda spec: (None,) + tuple(spec),
+            group_s[0][j],
+            is_leaf=lambda x: x is None or isinstance(x, tuple))
+            for j in range(g)]
+    else:
+        params["groups"], specs["groups"] = [], []
+
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg
+        ep, es = [], []
+        base = 2 + cfg.n_layers
+        for i in range(cfg.n_encoder_layers):
+            p, s = blocks.init_layer(keys[base + i], enc_cfg, i, dtype)
+            ep.append(p)
+            es.append(s)
+        params["encoder"] = {"layers": _stack(ep),
+                             "final_ln": jnp.ones((cfg.d_model,), dtype)}
+        specs["encoder"] = {
+            "layers": jax.tree.map(
+                lambda spec: (None,) + tuple(spec), es[0],
+                is_leaf=lambda x: x is None or isinstance(x, tuple)),
+            "final_ln": (None,),
+        }
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _run_encoder(params, cfg: ModelConfig, frames, *, unroll: bool = False):
+    """Bidirectional encoder over stub frame embeddings (B, S_enc, d)."""
+    x = frames
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(x, layer_params):
+        x, _ = blocks.apply_layer_full(layer_params, cfg, 0, x, positions,
+                                       causal=False)
+        return x, None
+
+    if unroll:
+        for li in range(cfg.n_encoder_layers):
+            lp = jax.tree.map(lambda a: a[li], params["encoder"]["layers"])
+            x, _ = body(x, lp)
+    else:
+        x, _ = jax.lax.scan(
+            lambda c, p: body(c, p), x, params["encoder"]["layers"])
+    return rms_norm(x, params["encoder"]["final_ln"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict, *,
+            moe_strategy: str = "local", remat: bool = True,
+            token_spec=None, unroll: bool = False):
+    """batch: {"tokens" (B,S), optional "prefix" (B,P,d), "frames" (B,F,d)}.
+
+    Returns (logits (B, S_total, V), aux_loss).  For prefix models the
+    prefix positions are included in logits (caller slices).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]                         # (B, S, d) gather
+    memory = None
+    if cfg.modality == "vision" and "prefix" in batch:
+        x = jnp.concatenate([batch["prefix"].astype(x.dtype), x], axis=1)
+    if cfg.is_encoder_decoder:
+        memory = _run_encoder(params, cfg, batch["frames"].astype(x.dtype),
+                              unroll=unroll)
+    S_tot = x.shape[1]
+    positions = jnp.arange(S_tot)
+    x = shard(x, "batch", None, None)
+    aux_total = jnp.float32(0.0)
+    pro, g, n_groups = _layout(cfg)
+
+    def one_layer(i, lp, x):
+        # sequence-parallel residual stream: the layer input is what remat
+        # saves per scanned layer — sharding S over "model" divides that
+        # footprint by the TP degree (norms/residual adds are elementwise)
+        x = shard(x, "batch", "seq", None)
+        x, aux = blocks.apply_layer_full(lp, cfg, i, x, positions,
+                                         causal=True, memory=memory,
+                                         moe_strategy=moe_strategy,
+                                         token_spec=token_spec)
+        return shard(x, "batch", "seq", None), aux
+
+    for i, lp in enumerate(params["prologue"]):
+        f = jax.checkpoint(partial(one_layer, i)) if remat else partial(one_layer, i)
+        x, aux = f(lp, x)
+        aux_total += aux
+
+    if n_groups:
+        def group_body(carry, group_params):
+            x, aux_acc = carry
+            for j in range(g):
+                i = pro + j      # layer kind depends on i mod periods only
+                f = (jax.checkpoint(partial(one_layer, i)) if remat
+                     else partial(one_layer, i))
+                x, aux = f(group_params[j], x)
+                aux_acc = aux_acc + aux
+            return (x, aux_acc), None
+
+        if unroll:  # dry-run cost probes: scan bodies are cost-counted once
+            for gi in range(n_groups):
+                gp = jax.tree.map(lambda a: a[gi], params["groups"])
+                (x, aux_total), _ = group_body((x, aux_total), gp)
+        else:
+            (x, aux_total), _ = jax.lax.scan(
+                group_body, (x, aux_total), params["groups"])
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"].T)
+    logits = x @ unembed                                # (B, S_tot, Vp)
+    logits = shard(logits, "batch", None, "tp")
+    return _mask_padded_logits(cfg, logits), aux_total
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, kv_len: int,
+                      dtype=jnp.bfloat16, *, enc_len: int = 0):
+    """Cache pytree: prologue list + per-group-position stacked caches."""
+    pro, g, n_groups = _layout(cfg)
+    state = {"prologue": [blocks.init_layer_cache(cfg, i, batch, kv_len, dtype,
+                                                  enc_len=enc_len)
+                          for i in range(pro)]}
+    groups = []
+    for j in range(g):
+        i = pro + j
+        one = blocks.init_layer_cache(cfg, i, batch, kv_len, dtype,
+                                      enc_len=enc_len)
+        groups.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape).copy(), one))
+    state["groups"] = groups
+    return state
+
+
+def decode(params, cfg: ModelConfig, tokens, state, pos, *,
+           moe_strategy: str = "local", token_spec=None, unroll: bool = False):
+    """One decode step.  tokens (B, 1) int32; pos scalar int32 position."""
+    x = params["embed"][tokens]
+    pro, g, n_groups = _layout(cfg)
+    new_pro = []
+    for i, lp in enumerate(params["prologue"]):
+        x, c = blocks.apply_layer_decode(lp, cfg, i, x, state["prologue"][i],
+                                         pos, moe_strategy=moe_strategy,
+                                         token_spec=token_spec)
+        new_pro.append(c)
+
+    new_groups = state["groups"]
+    if n_groups:
+        def group_body(x, scanned):
+            group_params, caches = scanned
+            new_caches = []
+            for j in range(g):
+                i = pro + j
+                x, c = blocks.apply_layer_decode(
+                    group_params[j], cfg, i, x, caches[j], pos,
+                    moe_strategy=moe_strategy, token_spec=token_spec)
+                new_caches.append(c)
+            return x, new_caches
+
+        if unroll:
+            ng_list = []
+            for gi in range(n_groups):
+                gp = jax.tree.map(lambda a: a[gi], params["groups"])
+                gc = jax.tree.map(lambda a: a[gi], state["groups"])
+                x, nc = group_body(x, (gp, gc))
+                ng_list.append(nc)
+            new_groups = jax.tree.map(lambda *xs: jnp.stack(xs), *ng_list)
+        else:
+            x, new_groups = jax.lax.scan(
+                group_body, x, (params["groups"], state["groups"]))
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"].T)
+    logits = _mask_padded_logits(cfg, x @ unembed)
+    return logits, {"prologue": new_pro, "groups": new_groups}
+
+
+def prefill_cross_attention(params, cfg: ModelConfig, state, memory):
+    """Populate the decode state's cross-attention k/v from encoder memory."""
+    B = memory.shape[0]
+    hd = cfg.resolved_head_dim
+
+    def kv(wk, wv):
+        if wk.ndim == 3:   # stacked group weights (n_groups, d, Hkv*hd)
+            xk = jnp.einsum("bsd,gdh->gbsh", memory, wk)
+            xv = jnp.einsum("bsd,gdh->gbsh", memory, wv)
+            G = wk.shape[0]
+            return (xk.reshape(G, B, -1, cfg.n_kv_heads, hd),
+                    xv.reshape(G, B, -1, cfg.n_kv_heads, hd))
+        xk = (memory @ wk).reshape(B, -1, cfg.n_kv_heads, hd)
+        xv = (memory @ wv).reshape(B, -1, cfg.n_kv_heads, hd)
+        return xk, xv
+
+    for i, c in enumerate(state["prologue"]):
+        c["xk"], c["xv"] = kv(params["prologue"][i]["cross"]["wk"],
+                              params["prologue"][i]["cross"]["wv"])
+    for j, c in enumerate(state["groups"]):
+        c["xk"], c["xv"] = kv(params["groups"][j]["cross"]["wk"],
+                              params["groups"][j]["cross"]["wv"])
+    return state
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits, targets, *, prefix_len: int = 0):
+    """Mean cross-entropy over the text positions.  targets (B, S_text).
+
+    Written without take_along_axis: a gather over the vocab axis would make
+    GSPMD all-gather the (B, S, V) logits when the vocab is tensor-sharded;
+    the masked-sum form keeps everything vocab-sharded (the reductions become
+    cheap all-reduces of (B, S) partials).
+    """
+    if prefix_len:
+        logits = logits[:, prefix_len:]
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    onehot = targets[..., None] == jnp.arange(V, dtype=targets.dtype)
+    tgt_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.mean(lse - tgt_logit)

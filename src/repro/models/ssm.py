@@ -1,0 +1,272 @@
+"""Attention-free mixers: RWKV6 ("Finch") time-mix and Mamba-1 SSM.
+
+TPU adaptation (DESIGN.md): the reference CUDA kernels for both models are
+sequential per-token loops.  We restructure them as *chunked* recurrences —
+an outer `lax.scan` over chunks carrying the constant-size recurrent state,
+with the inner chunk computed either in parallel matmul form (RWKV6: the
+chunked linear-attention identity feeds the MXU) or as a remat'd inner scan
+(Mamba: the (d_inner, N) state makes the full (T, d_inner, N) unrolled scan
+prohibitively large).  Decode is the plain one-token recurrence.
+
+RWKV6 recurrence per head (head dim D):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: D x D, w_t data-dependent)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)      (u: per-head "bonus")
+Chunked form with A_t = cumprod_{j<=t} w_t (within chunk):
+    o_t = (r_t * A_t) S_0 + sum_{j<t} (r_t * A_t / A_j) k_j v_j^T + bonus term
+    S_L = diag(A_L) S_0 + sum_j diag(A_L / A_j) k_j v_j^T
+float32 state; decays are clamped so A never underflows within a chunk.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm, zeros_init
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+DECAY_LORA = 64
+
+
+def init_rwkv6(key, cfg: ModelConfig, dtype) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    p, s = {}, {}
+    for i, nm in enumerate(("wr", "wk", "wv", "wg")):
+        p[nm], s[nm] = dense_init(ks[i], (d, d), ("fsdp", "tp"), dtype)
+    p["wo"], s["wo"] = dense_init(ks[4], (d, d), ("tp", "fsdp"), dtype)
+    # data-dependent decay: low-rank lora  w_t = exp(-exp(base + tanh(x A) B))
+    p["decay_a"], s["decay_a"] = dense_init(ks[5], (d, DECAY_LORA), ("fsdp", None), dtype)
+    p["decay_b"], s["decay_b"] = dense_init(ks[6], (DECAY_LORA, d), (None, "tp"), dtype)
+    p["decay_base"], s["decay_base"] = zeros_init((d,), ("tp",), jnp.float32)
+    p["bonus"], s["bonus"] = zeros_init((d,), ("tp",), jnp.float32)
+    # token-shift mixing coefficients (simplified static shift)
+    p["mix_rkvg"], s["mix_rkvg"] = (0.5 * jnp.ones((4, d), jnp.float32),
+                                    (None, None))
+    p["ln_x"], s["ln_x"] = jnp.ones((d,), dtype), (None,)
+    return p, s
+
+
+def _rwkv6_rkvgw(params, cfg: ModelConfig, x, x_prev):
+    """Project shifted inputs to r, k, v, g, and per-token decay w.
+
+    x (B, T, d); x_prev (B, 1, d) is the last token of the previous chunk.
+    """
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mix = params["mix_rkvg"]                      # (4, d)
+
+    def mixi(i):
+        return x * mix[i] + shifted * (1.0 - mix[i])
+
+    r = mixi(0) @ params["wr"]
+    k = mixi(1) @ params["wk"]
+    v = mixi(2) @ params["wv"]
+    g = jax.nn.silu((mixi(3) @ params["wg"]).astype(jnp.float32))
+    dx = jnp.tanh((x.astype(jnp.float32) @ params["decay_a"].astype(jnp.float32)))
+    dlog = params["decay_base"] + dx @ params["decay_b"].astype(jnp.float32)
+    # clip so that cumprod over a chunk AND its gradient (~1/A^2) stay well
+    # inside float32 range: min decay exp(-e^0) ~ 0.368; 0.368^16 ~ 1.2e-7,
+    # so 1/A^2 <= ~7e13 << f32 max.  (Decay floor 0.368/token still forgets
+    # the state within ~10 tokens — documented approximation, DESIGN.md.)
+    w = jnp.exp(-jnp.exp(jnp.clip(dlog, -8.0, 0.0)))      # (B, T, d) in (0,1)
+    return r, k, v, g, w
+
+
+def rwkv6_chunk(r, k, v, w, u, S0, *, head_dim: int):
+    """One chunk of the chunked linear-attention recurrence.
+
+    r/k/v/w: (B, L, H, D) float32; u: (H, D); S0: (B, H, D, D).
+    Returns (out (B, L, H, D), S_L).
+    """
+    B, L, H, D = r.shape
+    A = jnp.cumprod(w, axis=1)                             # inclusive: prod_{i<=t}
+    A_exc = A / w                                          # exclusive: prod_{i<t}
+    r_ = r * A_exc     # queries see S_{t-1}: decay prod_{i<t} relative to S0
+    k_ = k / A         # keys compensated by their own inclusive decay
+    # inter-chunk: o_inter[t] = (r_t * A_{t-1}) @ S0
+    o_inter = jnp.einsum("blhd,bhde->blhe", r_, S0)
+    # intra-chunk (strictly causal j < t): coeff A_{t-1}/A_j
+    att = jnp.einsum("blhd,bmhd->bhlm", r_, k_)
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    att = jnp.where(mask[None, None], att, 0.0)
+    o_intra = jnp.einsum("bhlm,bmhe->blhe", att, v)
+    # bonus: current token contributes via diag(u)
+    o_bonus = jnp.einsum("blhd,blhd,blhe->blhe", r, u[None, None] * k, v)
+    out = o_inter + o_intra + o_bonus
+    # state: S_L = diag(A_L)(S0 + sum_j diag(1/A_j) k_j v_j^T)
+    S_L = A[:, -1][..., None] * (S0 + jnp.einsum("blhd,blhe->bhde", k_, v))
+    return out, S_L
+
+
+def rwkv6_mix(params, cfg: ModelConfig, x, *, chunk: int = 16):
+    """Full-sequence RWKV6 time-mix.  x (B, T, d)."""
+    B, T, d = x.shape
+    D = cfg.ssm_head_dim
+    H = d // D
+    x_prev = jnp.zeros((B, 1, d), x.dtype)
+    r, k, v, g, w = _rwkv6_rkvgw(params, cfg, x, x_prev)
+    f32 = lambda a: a.astype(jnp.float32).reshape(B, T, H, D)
+    r, k, v, w = f32(r), f32(k), f32(v), f32(w)
+    u = params["bonus"].reshape(H, D)
+
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    n_chunks = T // chunk
+    rc = r.reshape(B, n_chunks, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, n_chunks, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    wc = w.reshape(B, n_chunks, chunk, H, D).transpose(1, 0, 2, 3, 4)
+
+    def step(S, inp):
+        rr, kk, vv, ww = inp
+        out, S = rwkv6_chunk(rr, kk, vv, ww, u, S, head_dim=D)
+        return S, out
+
+    S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    _, outs = jax.lax.scan(step, S0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, T, d)
+    out = rms_norm(out.astype(x.dtype), params["ln_x"], cfg.norm_eps)
+    out = (out.astype(jnp.float32) * g).astype(x.dtype)
+    return out @ params["wo"]
+
+
+def rwkv6_decode(params, cfg: ModelConfig, x, state):
+    """One token.  state: {"S": (B,H,D,D) f32, "x_prev": (B,1,d)}."""
+    B, _, d = x.shape
+    D = cfg.ssm_head_dim
+    H = d // D
+    r, k, v, g, w = _rwkv6_rkvgw(params, cfg, x, state["x_prev"])
+    f32 = lambda a: a.astype(jnp.float32).reshape(B, H, D)
+    r, k, v, w = f32(r), f32(k), f32(v), f32(w)
+    u = params["bonus"].reshape(H, D)
+    S = state["S"]
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    out = jnp.einsum("bhd,bhde->bhe", r, S + u[None, :, :, None] * kv)
+    S = w[..., None] * S + kv
+    out = out.reshape(B, 1, d)
+    out = rms_norm(out.astype(x.dtype), params["ln_x"], cfg.norm_eps)
+    out = (out.astype(jnp.float32) * g.reshape(B, 1, d)).astype(x.dtype)
+    return out @ params["wo"], {"S": S, "x_prev": x}
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d, D = cfg.d_model, cfg.ssm_head_dim
+    H = d // D
+    return {"S": jnp.zeros((batch, H, D, D), jnp.float32),
+            "x_prev": jnp.zeros((batch, 1, d), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (Jamba's SSM mixer)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    inner = d * cfg.ssm_expand
+    N = cfg.ssm_state_dim
+    ks = jax.random.split(key, 7)
+    p, s = {}, {}
+    p["w_in"], s["w_in"] = dense_init(ks[0], (d, 2 * inner), ("fsdp", "tp"), dtype)
+    p["conv_w"], s["conv_w"] = dense_init(ks[1], (cfg.ssm_conv_dim, inner), (None, "tp"), dtype)
+    p["conv_b"], s["conv_b"] = zeros_init((inner,), ("tp",), dtype)
+    dt_rank = max(1, d // 16)
+    p["w_bcdt"], s["w_bcdt"] = dense_init(ks[2], (inner, 2 * N + dt_rank),
+                                          ("tp", None), dtype)
+    p["dt_bias"], s["dt_bias"] = zeros_init((inner,), ("tp",), jnp.float32)
+    p["w_dt"], s["w_dt"] = dense_init(ks[3], (dt_rank, inner), (None, "tp"), dtype)
+    # A: (inner, N) negative diagonal, stored as log
+    a = jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (inner, 1)))
+    p["a_log"], s["a_log"] = a, ("tp", None)
+    p["d_skip"], s["d_skip"] = jnp.ones((inner,), jnp.float32), ("tp",)
+    p["w_out"], s["w_out"] = dense_init(ks[4], (inner, d), ("tp", "fsdp"), dtype)
+    return p, s
+
+
+def _mamba_scan_inputs(params, cfg: ModelConfig, x, conv_state=None):
+    """Shared projections.  x (B, T, d) -> (xz gate, u, B_, C_, dt)."""
+    inner = cfg.d_model * cfg.ssm_expand
+    N = cfg.ssm_state_dim
+    xz = x @ params["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)                      # (B, T, inner)
+    # depthwise causal conv over time
+    K = cfg.ssm_conv_dim
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, inner), u.dtype)
+    else:
+        pad = conv_state
+    u_pad = jnp.concatenate([pad, u], axis=1)
+    new_conv_state = u_pad[:, -(K - 1):] if K > 1 else None
+    conv = sum(u_pad[:, i:i + u.shape[1]] * params["conv_w"][i]
+               for i in range(K))
+    u = jax.nn.silu((conv + params["conv_b"]).astype(jnp.float32))
+    bcdt = u.astype(x.dtype) @ params["w_bcdt"]
+    B_, C_, dt_in = bcdt[..., :N], bcdt[..., N:2 * N], bcdt[..., 2 * N:]
+    del inner
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) @ params["w_dt"]
+                         + params["dt_bias"])             # (B, T, inner)
+    return u, z, B_.astype(jnp.float32), C_.astype(jnp.float32), dt, new_conv_state
+
+
+def mamba_mix(params, cfg: ModelConfig, x, *, chunk: int = 256):
+    """Full-sequence Mamba.  Outer scan over chunks, remat'd inner scan."""
+    B, T, d = x.shape
+    inner = d * cfg.ssm_expand
+    N = cfg.ssm_state_dim
+    u, z, B_, C_, dt, _ = _mamba_scan_inputs(params, cfg, x)
+    A = -jnp.exp(params["a_log"])                          # (inner, N)
+
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    n_chunks = T // chunk
+
+    def to_chunks(a):
+        return a.reshape(B, n_chunks, chunk, -1).transpose(1, 0, 2, 3)
+
+    uc, bc, cc, dtc = map(to_chunks, (u, B_, C_, dt))
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        uu, bb, ccx, ddt = inp                              # (B, L, ·)
+
+        def step(h, t_inp):
+            u_t, b_t, c_t, dt_t = t_inp                     # (B, inner/N)
+            da = jnp.exp(dt_t[..., None] * A[None])         # (B, inner, N)
+            h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+            y = jnp.einsum("bin,bn->bi", h, c_t)
+            return h, y
+
+        h, ys = jax.lax.scan(step, h, (uu.transpose(1, 0, 2), bb.transpose(1, 0, 2),
+                                       ccx.transpose(1, 0, 2), ddt.transpose(1, 0, 2)))
+        return h, ys.transpose(1, 0, 2)                     # (B, L, inner)
+
+    h0 = jnp.zeros((B, inner, N), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, (uc, bc, cc, dtc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, inner)
+    y = y + u * params["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["w_out"]
+
+
+def mamba_decode(params, cfg: ModelConfig, x, state):
+    """One token.  state: {"h": (B, inner, N) f32, "conv": (B, K-1, inner)}."""
+    B = x.shape[0]
+    A = -jnp.exp(params["a_log"])
+    u, z, B_, C_, dt, new_conv = _mamba_scan_inputs(
+        params, cfg, x, conv_state=state["conv"])
+    u1, b1, c1, dt1 = u[:, 0], B_[:, 0], C_[:, 0], dt[:, 0]
+    da = jnp.exp(dt1[..., None] * A[None])
+    h = da * state["h"] + (dt1 * u1)[..., None] * b1[:, None, :]
+    y = jnp.einsum("bin,bn->bi", h, c1) + u1 * params["d_skip"]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    return (y @ params["w_out"])[:, None], {"h": h, "conv": new_conv}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    inner = cfg.d_model * cfg.ssm_expand
+    return {"h": jnp.zeros((batch, inner, cfg.ssm_state_dim), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, inner), dtype)}

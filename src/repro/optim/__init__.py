@@ -1,0 +1,13 @@
+"""Optimizers implemented in pure JAX (no optax dependency).
+
+AdamW for the standard archs; Adafactor (factored second moments) for the
+trillion-parameter MoE configs where fp32 Adam states would not fit per-chip
+HBM on the production mesh (see DESIGN.md §Distribution); SGD+momentum for
+smoke tests.  All follow the (init_fn, update_fn) pytree convention and are
+scan/jit/shard-transparent (states inherit the parameter shardings).
+"""
+from repro.optim.optimizers import (OptState, adamw, adafactor, sgd,
+                                    cosine_schedule, get_optimizer)
+
+__all__ = ["OptState", "adamw", "adafactor", "sgd", "cosine_schedule",
+           "get_optimizer"]

@@ -1,0 +1,144 @@
+"""(init, update) optimizer pairs over arbitrary parameter pytrees."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], Tuple[Any, OptState]]
+    name: str
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          schedule: Callable = None) -> Optimizer:
+    lr_fn = schedule if schedule is not None else (lambda s: jnp.float32(lr))
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), (zeros, jax.tree.map(jnp.copy, zeros)))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        m, v = state.inner
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), m, grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(p, m_, v_):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            return (p - lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                                + weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m, v), OptState(step, (m, v))
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0, schedule: Callable = None) -> Optimizer:
+    """Factored second moments: O(r + c) state for (r, c) matrices.
+
+    Used for the >=200B MoE configs: fp32 Adam m+v for kimi-k2 (1T params)
+    would need ~16 GB/chip on the 512-chip mesh — adafactor's factored state
+    is ~1/10^3 of that for the expert matrices.
+    """
+    lr_fn = schedule if schedule is not None else (lambda s: jnp.float32(lr))
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                return (jnp.zeros(p.shape[:-1], jnp.float32),       # row
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))  # col
+            return jnp.zeros_like(p, dtype=jnp.float32)
+        return OptState(jnp.zeros((), jnp.int32), jax.tree.map(leaf, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr, vc = s
+                vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., :, None] * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps))
+                u = g / jnp.maximum(denom, eps)
+                new_s = (vr, vc)
+            else:
+                v = beta * s + (1 - beta) * g2
+                u = g / jnp.sqrt(v + eps)
+                new_s = v
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p - lr_t * u - lr_t * weight_decay * p.astype(jnp.float32)
+            return newp.astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state.inner)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_inner = treedef.unflatten([o[1] for o in out])
+        return new_params, OptState(step, new_inner)
+
+    return Optimizer(init, update, "adafactor")
+
+
+def sgd(lr=1e-2, momentum=0.9, schedule: Callable = None) -> Optimizer:
+    lr_fn = schedule if schedule is not None else (lambda s: jnp.float32(lr))
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        vel = jax.tree.map(lambda v, g: momentum * v + g.astype(jnp.float32),
+                           state.inner, grads)
+        lr_t = lr_fn(step)
+        params = jax.tree.map(lambda p, v: (p - lr_t * v).astype(p.dtype), params, vel)
+        return params, OptState(step, vel)
+
+    return Optimizer(init, update, "sgd")
+
+
+def get_optimizer(name: str, lr: float = 1e-3, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr=lr, **kw)
+    if name == "sgd":
+        return sgd(lr=lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

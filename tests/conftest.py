@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests run on the real (single) CPU device — the 512-device override is for
+# launch/dryrun.py ONLY (see the multi-pod dry-run instructions).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

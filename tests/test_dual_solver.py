@@ -1,0 +1,92 @@
+"""Stage 2: optimality (KKT / duality gap), shrinking, warm starts, batching."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dual_solver import (SolverConfig, TaskBatch, duality_gap,
+                                    solve_batch, solve_one)
+from repro.core.kernel_fn import KernelParams
+from repro.core.nystrom import compute_factor
+
+
+def _problem(rng, n=400, C=4.0, budget=128):
+    x = rng.normal(size=(n, 5)).astype(np.float32)
+    y = np.where(x[:, 0] * x[:, 1] + 0.3 * x[:, 2] > 0, 1.0, -1.0).astype(np.float32)
+    fac = compute_factor(jnp.asarray(x), KernelParams("rbf", gamma=0.7), budget)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    c = jnp.full((n,), C, jnp.float32)
+    return fac.G, idx, jnp.asarray(y), c
+
+
+def test_converges_with_small_gap(rng):
+    G, idx, y, c = _problem(rng)
+    cfg = SolverConfig(tol=1e-3, max_epochs=3000)
+    res = solve_one(G, idx, y, c, jnp.zeros_like(c), cfg)
+    assert float(res.violation) < 1e-3
+    gap = float(duality_gap(G, idx, y, c, res.alpha))
+    assert abs(gap) < 1e-2 * abs(float(res.dual_obj))
+
+
+def test_alpha_in_box(rng):
+    G, idx, y, c = _problem(rng, C=2.0)
+    res = solve_one(G, idx, y, c, jnp.zeros_like(c),
+                    SolverConfig(tol=1e-2, max_epochs=500))
+    a = np.asarray(res.alpha)
+    assert a.min() >= 0.0 and a.max() <= 2.0 + 1e-6
+
+
+def test_shrinking_preserves_solution(rng):
+    G, idx, y, c = _problem(rng)
+    cfg_on = SolverConfig(tol=1e-3, max_epochs=3000, shrink=True)
+    cfg_off = SolverConfig(tol=1e-3, max_epochs=3000, shrink=False)
+    r_on = solve_one(G, idx, y, c, jnp.zeros_like(c), cfg_on)
+    r_off = solve_one(G, idx, y, c, jnp.zeros_like(c), cfg_off)
+    assert abs(float(r_on.dual_obj - r_off.dual_obj)) < 1e-2 * abs(float(r_off.dual_obj))
+
+
+def test_warm_start_fewer_epochs(rng):
+    G, idx, y, c = _problem(rng, C=1.0)
+    cfg = SolverConfig(tol=1e-3, max_epochs=3000)
+    res1 = solve_one(G, idx, y, c, jnp.zeros_like(c), cfg)
+    # re-solve at larger C warm vs cold (paper: warm start over the C grid)
+    c2 = 4.0 * c
+    warm = jnp.clip(res1.alpha, 0.0, c2)
+    res_warm = solve_one(G, idx, y, c2, warm, cfg)
+    res_cold = solve_one(G, idx, y, c2, jnp.zeros_like(c), cfg)
+    assert int(res_warm.epochs) <= int(res_cold.epochs)
+    assert abs(float(res_warm.dual_obj - res_cold.dual_obj)) \
+        < 1e-2 * abs(float(res_cold.dual_obj))
+
+
+def test_padding_inert(rng):
+    G, idx, y, c = _problem(rng, n=200)
+    cfg = SolverConfig(tol=1e-3, max_epochs=2000)
+    res = solve_one(G, idx, y, c, jnp.zeros_like(c), cfg)
+    pad = 64
+    idx_p = jnp.concatenate([idx, jnp.zeros((pad,), jnp.int32)])
+    y_p = jnp.concatenate([y, jnp.ones((pad,))])
+    c_p = jnp.concatenate([c, jnp.zeros((pad,))])
+    res_p = solve_one(G, idx_p, y_p, c_p, jnp.zeros_like(c_p), cfg)
+    assert np.allclose(np.asarray(res_p.alpha[:200]), np.asarray(res.alpha),
+                       atol=1e-5)
+    assert np.all(np.asarray(res_p.alpha[200:]) == 0.0)
+
+
+def test_batch_matches_single(rng):
+    G, idx, y, c = _problem(rng, n=150)
+    cfg = SolverConfig(tol=1e-2, max_epochs=1000)
+    single = solve_one(G, idx, y, c, jnp.zeros_like(c), cfg)
+    tasks = TaskBatch(idx=jnp.stack([idx] * 3), y=jnp.stack([y] * 3),
+                      c=jnp.stack([c, 0.5 * c, 2.0 * c]),
+                      alpha0=jnp.zeros((3, 150)))
+    res = solve_batch(G, tasks, cfg)
+    assert np.allclose(np.asarray(res.w[0]), np.asarray(single.w), atol=1e-4)
+    # different C -> different solutions
+    assert not np.allclose(np.asarray(res.w[1]), np.asarray(res.w[2]), atol=1e-3)
+
+
+def test_respects_max_epochs(rng):
+    G, idx, y, c = _problem(rng)
+    res = solve_one(G, idx, y, c, jnp.zeros_like(c),
+                    SolverConfig(tol=1e-9, max_epochs=7))
+    assert int(res.epochs) == 7

@@ -1,0 +1,71 @@
+"""Flash attention Pallas kernel vs oracle: shape/dtype/block sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ref import flash_attention_ref
+
+
+def _qkv(rng, BH, S, D, dtype=jnp.float32):
+    mk = lambda: jnp.asarray(rng.normal(size=(BH, S, D)), dtype)
+    return mk(), mk(), mk()
+
+
+@pytest.mark.parametrize("BH,S,D,bq,bk", [
+    (4, 128, 64, 32, 32),
+    (2, 64, 32, 16, 32),
+    (3, 96, 128, 32, 48),
+    (1, 256, 64, 256, 64),     # single q block
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_allclose(rng, BH, S, D, bq, bk, causal):
+    q, k, v = _qkv(rng, BH, S, D)
+    got = flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
+                                 interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16(rng):
+    q, k, v = _qkv(rng, 2, 64, 64, jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, causal=True, bq=32, bk=32,
+                                 interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_wrapper_pads_ragged_seq(rng):
+    """(B, H, S, D) wrapper with S not divisible by the block size."""
+    B, H, S, D = 2, 3, 80, 32
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, bq=32, bk=32, interpret=True)
+    want = flash_attention_ref(q.reshape(B * H, S, D), k.reshape(B * H, S, D),
+                               v.reshape(B * H, S, D), causal=True)
+    np.testing.assert_allclose(np.asarray(got).reshape(B * H, S, D),
+                               np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_matches_model_attention(rng):
+    """The kernel and the model's two-level-chunked jnp path must agree."""
+    from repro.models.attention import _flash as model_flash
+    BH, S, D = 2, 64, 32
+    q, k, v = _qkv(rng, BH, S, D)
+    pos = jnp.arange(S)
+    # model layout: (B, Sq, Hkv, G, hd) with Hkv=BH, G=1, B=1
+    qm = q.transpose(1, 0, 2)[None, :, :, None, :]
+    km = k.transpose(1, 0, 2)[None]
+    vm = v.transpose(1, 0, 2)[None]
+    out_model = model_flash(qm, km, vm, pos, pos, causal=True, window=0,
+                            kv_chunk=16, q_chunk=16)
+    out_kernel = flash_attention_pallas(q, k, v, causal=True, bq=32, bk=32,
+                                        interpret=True)
+    a = np.asarray(out_model)[0, :, :, 0].transpose(1, 0, 2)
+    np.testing.assert_allclose(a, np.asarray(out_kernel), rtol=2e-4, atol=2e-4)

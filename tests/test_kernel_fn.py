@@ -1,0 +1,55 @@
+"""Kernel-function layer: values, symmetry, PSD-ness."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernel_fn import KernelParams, gram, kernel_diag
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("rbf", dict(gamma=0.7)),
+    ("linear", {}),
+    ("poly", dict(gamma=0.5, coef0=1.0, degree=3)),
+    ("tanh", dict(gamma=0.05, coef0=0.1)),
+])
+def test_gram_matches_naive(rng, kind, kw):
+    x = jnp.asarray(rng.normal(size=(20, 5)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(15, 5)), jnp.float32)
+    kp = KernelParams(kind, **kw)
+    K = np.asarray(gram(x, z, kp))
+    for i in [0, 7, 19]:
+        for j in [0, 3, 14]:
+            xi, zj = np.asarray(x[i]), np.asarray(z[j])
+            dot = float(xi @ zj)
+            if kind == "rbf":
+                want = np.exp(-kw["gamma"] * ((xi - zj) ** 2).sum())
+            elif kind == "linear":
+                want = dot
+            elif kind == "poly":
+                want = (kw["gamma"] * dot + kw["coef0"]) ** kw["degree"]
+            else:
+                want = np.tanh(kw["gamma"] * dot + kw["coef0"])
+            assert abs(K[i, j] - want) < 1e-4
+
+
+def test_rbf_gram_psd_and_symmetric(rng):
+    x = jnp.asarray(rng.normal(size=(40, 4)), jnp.float32)
+    K = np.asarray(gram(x, x, KernelParams("rbf", gamma=0.5)))
+    assert np.allclose(K, K.T, atol=1e-5)
+    evals = np.linalg.eigvalsh((K + K.T) / 2)
+    assert evals.min() > -1e-4
+    assert np.allclose(np.diag(K), 1.0, atol=1e-5)
+
+
+def test_kernel_diag_consistent(rng):
+    x = jnp.asarray(rng.normal(size=(10, 6)), jnp.float32)
+    for kind in ("rbf", "linear", "poly", "tanh"):
+        kp = KernelParams(kind, gamma=0.3, coef0=0.5)
+        d = np.asarray(kernel_diag(x, kp))
+        K = np.asarray(gram(x, x, kp))
+        assert np.allclose(d, np.diag(K), atol=1e-4)
+
+
+def test_unknown_kernel_rejected():
+    with pytest.raises(ValueError):
+        KernelParams("cosine")

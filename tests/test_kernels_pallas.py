@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernel_fn import KernelParams
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,m,p", [
+    (128, 128, 512),      # exactly one tile
+    (130, 70, 33),        # everything ragged
+    (17, 300, 1100),      # tall/skinny + multi-k
+    (256, 128, 512),
+])
+@pytest.mark.parametrize("kind", ["rbf", "linear", "poly", "tanh"])
+def test_gram_kernel_allclose(rng, n, m, p, kind):
+    x = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(m, p)), jnp.float32)
+    kp = KernelParams(kind, gamma=0.11, coef0=0.3, degree=2)
+    got = ops.gram(x, z, kp, interpret=True)
+    want = ref.gram_ref(x, z, kp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("tn,tm,tp", [(128, 128, 512), (8, 16, 32)])
+def test_gram_kernel_tile_sweep(rng, tn, tm, tp):
+    x = jnp.asarray(rng.normal(size=(40, 64)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(24, 64)), jnp.float32)
+    kp = KernelParams("rbf", gamma=0.25)
+    got = ops.gram(x, z, kp, tn=tn, tm=tm, tp=tp, interpret=True)
+    want = ref.gram_ref(x, z, kp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _smo_inputs(rng, n=96, B=64, frac_pad=0.1):
+    G = jnp.asarray(rng.normal(size=(n, B)) / np.sqrt(B), jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=n), jnp.float32)
+    c = np.full((n,), 2.0, np.float32)
+    c[int(n * (1 - frac_pad)):] = 0.0
+    c = jnp.asarray(c)
+    q = jnp.sum(G ** 2, axis=1)
+    alpha = jnp.asarray(rng.uniform(0, 2, size=n).astype(np.float32)) * (c > 0)
+    w = (alpha * y) @ G
+    unch = jnp.asarray(rng.integers(0, 8, size=n), jnp.int32)
+    return G, y, c, q, alpha, unch, w
+
+
+@pytest.mark.parametrize("full_pass", [True, False])
+@pytest.mark.parametrize("n,B", [(96, 64), (200, 96), (64, 128)])
+def test_smo_epoch_allclose(rng, full_pass, n, B):
+    G, y, c, q, alpha, unch, w = _smo_inputs(rng, n, B)
+    a1, u1, w1, v1 = ops.smo_epoch(G, y, c, q, alpha, unch, w,
+                                   full_pass=full_pass, interpret=True)
+    a2, u2, w2, v2 = ref.smo_epoch_ref(
+        G, y[:, None], c[:, None], q[:, None], alpha[:, None],
+        unch[:, None], w[None, :], full_pass=full_pass)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2[:, 0]), atol=3e-6)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2[0]), atol=3e-5)
+    assert np.mean(np.asarray(u1) == np.asarray(u2[:, 0])) > 0.98
+    assert abs(float(v1) - float(v2[0, 0])) < 1e-4
+
+
+def test_smo_epoch_monotone_dual(rng):
+    """Coordinate ascent must not decrease the dual objective."""
+    G, y, c, q, alpha, unch, w = _smo_inputs(rng, 128, 64, frac_pad=0.0)
+    def dual(a, wv):
+        return float(jnp.sum(a) - 0.5 * jnp.dot(wv, wv))
+    d0 = dual(alpha, w)
+    a, u, wv, _ = ops.smo_epoch(G, y, c, q, alpha, unch, w,
+                                full_pass=True, interpret=True)
+    d1 = dual(a, wv)
+    a, u, wv, _ = ops.smo_epoch(G, y, c, q, a, u, wv,
+                                full_pass=True, interpret=True)
+    d2 = dual(a, wv)
+    assert d1 >= d0 - 1e-4 and d2 >= d1 - 1e-4
+
+
+def test_gram_accepts_bf16_inputs(rng):
+    """Wrapper casts to f32 internally (SVM path is f32 by design)."""
+    x = jnp.asarray(rng.normal(size=(40, 64)), jnp.bfloat16)
+    z = jnp.asarray(rng.normal(size=(24, 64)), jnp.bfloat16)
+    kp = KernelParams("rbf", gamma=0.25)
+    got = ops.gram(x, z, kp, interpret=True)
+    want = ref.gram_ref(x.astype(jnp.float32), z.astype(jnp.float32), kp)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("tn", [8, 64, 256])
+def test_smo_epoch_tile_sweep(rng, tn):
+    G, y, c, q, alpha, unch, w = _smo_inputs(rng, 96, 64)
+    a1, u1, w1, v1 = ops.smo_epoch(G, y, c, q, alpha, unch, w,
+                                   full_pass=True, tn=tn, interpret=True)
+    a2, u2, w2, v2 = ref.smo_epoch_ref(
+        G, y[:, None], c[:, None], q[:, None], alpha[:, None],
+        unch[:, None], w[None, :], full_pass=True)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2[:, 0]), atol=3e-6)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2[0]), atol=3e-5)

@@ -1,0 +1,65 @@
+"""Stage 1: low-rank factor quality, eigenvalue dropping, feature map."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernel_fn import KernelParams, gram
+from repro.core.nystrom import (approximation_error, compute_factor,
+                                select_landmarks)
+
+
+def test_full_budget_is_exact(rng):
+    """With B = n the Nyström factor reproduces K exactly (up to eig drop)."""
+    x = jnp.asarray(rng.normal(size=(60, 4)), jnp.float32)
+    kp = KernelParams("rbf", gamma=0.5)
+    fac = compute_factor(x, kp, budget=60)
+    K = np.asarray(gram(x, x, kp))
+    K_hat = np.asarray(fac.G @ fac.G.T)
+    assert np.abs(K - K_hat).max() < 1e-2
+
+
+def test_error_decreases_with_budget(rng):
+    x = jnp.asarray(rng.normal(size=(400, 6)), jnp.float32)
+    kp = KernelParams("rbf", gamma=0.3)
+    errs = [approximation_error(compute_factor(x, kp, budget=b), x, kp)
+            for b in (25, 100, 300)]
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 0.15
+
+
+def test_eigenvalue_dropping(rng):
+    # duplicate landmarks -> rank-deficient K_mm -> dropped directions
+    base = rng.normal(size=(20, 4)).astype(np.float32)
+    x = jnp.asarray(np.concatenate([base, base, base]), jnp.float32)
+    kp = KernelParams("rbf", gamma=0.5)
+    fac = compute_factor(x, kp, budget=60)
+    assert fac.effective_rank <= 20 + 1
+    assert fac.G.shape[1] == fac.effective_rank
+    assert bool(jnp.all(jnp.isfinite(fac.G)))
+
+
+def test_features_match_training_rows(rng):
+    """factor.features(x_train) must reproduce the G rows (consistency of
+    the prediction path with the training representation)."""
+    x = jnp.asarray(rng.normal(size=(100, 5)), jnp.float32)
+    kp = KernelParams("rbf", gamma=0.8)
+    fac = compute_factor(x, kp, budget=40)
+    feats = fac.features(x)
+    assert np.abs(np.asarray(feats - fac.G)).max() < 1e-3
+
+
+def test_landmark_selection_subset(rng):
+    x = jnp.asarray(rng.normal(size=(50, 3)), jnp.float32)
+    lm = select_landmarks(x, 20, jax.random.PRNGKey(0))
+    assert lm.shape == (20, 3)
+    # each landmark is an actual row of x
+    d = jnp.min(jnp.sum((lm[:, None] - x[None]) ** 2, axis=-1), axis=1)
+    assert float(jnp.max(d)) < 1e-9
+
+
+def test_streaming_blocks_match(rng):
+    x = jnp.asarray(rng.normal(size=(150, 4)), jnp.float32)
+    kp = KernelParams("rbf", gamma=0.4)
+    f1 = compute_factor(x, kp, budget=32, block_rows=37)
+    f2 = compute_factor(x, kp, budget=32, block_rows=100000)
+    assert np.abs(np.asarray(f1.G - f2.G)).max() < 1e-5

@@ -1,0 +1,40 @@
+"""Model persistence + cross-gamma warm start (beyond-paper features)."""
+import tempfile
+
+import numpy as np
+
+from repro.core import KernelParams, LPDSVM, SolverConfig, grid_search
+from repro.data import make_multiclass, train_test_split
+
+
+def test_save_load_roundtrip(rng):
+    x, y = make_multiclass(500, p=6, n_classes=3, seed=31)
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.3)
+    svm = LPDSVM(KernelParams("rbf", gamma=0.1), C=4.0, budget=128,
+                 tol=1e-2).fit(xtr, ytr)
+    with tempfile.TemporaryDirectory() as d:
+        svm.save(d)
+        back = LPDSVM.load(d)
+    np.testing.assert_array_equal(svm.predict(xte), back.predict(xte))
+    np.testing.assert_allclose(svm.decision_function(xte),
+                               back.decision_function(xte), atol=1e-5)
+    assert back.kernel.kind == svm.kernel.kind
+    assert abs(back.kernel.gamma - svm.kernel.gamma) < 1e-6  # f32 roundtrip
+    assert back.C == svm.C
+
+
+def test_save_requires_fit():
+    import pytest
+    with pytest.raises(RuntimeError):
+        LPDSVM().save("/tmp/nowhere")
+
+
+def test_cross_gamma_warm_start_same_errors(rng):
+    x, y = make_multiclass(700, p=8, n_classes=3, seed=32)
+    kw = dict(gammas=[0.05, 0.1, 0.2], Cs=[2.0, 8.0], budget=150, folds=3,
+              config=SolverConfig(tol=1e-3, max_epochs=1500))
+    base = grid_search(x, y, warm_start_gamma=False, **kw)
+    warm = grid_search(x, y, warm_start_gamma=True, **kw)
+    # identical error surface (same optima), typically less stage-2 work
+    assert np.abs(base.errors - warm.errors).max() < 0.03
+    assert warm.best_error <= base.best_error + 0.03

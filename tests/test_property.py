@@ -1,0 +1,99 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.dual_solver import SolverConfig, solve_one
+from repro.core.kernel_fn import KernelParams, gram
+from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
+from repro.data import write_libsvm, read_libsvm
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+floats32 = st.floats(-3.0, 3.0, allow_nan=False, width=32)
+
+
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=2, max_side=12),
+                  elements=floats32),
+       st.floats(0.05, 3.0))
+def test_rbf_gram_properties(x, gamma):
+    """RBF gram: values in (0, 1], symmetric, unit diagonal."""
+    K = np.asarray(gram(jnp.asarray(x), jnp.asarray(x),
+                        KernelParams("rbf", gamma=gamma)))
+    # exp can underflow to exactly 0 in float32 for far-apart points
+    assert np.all(K <= 1.0 + 1e-5) and np.all(K >= 0.0)
+    assert np.allclose(K, K.T, atol=1e-5)
+    assert np.allclose(np.diag(K), 1.0, atol=1e-5)
+
+
+@given(st.integers(8, 40), st.integers(2, 6), st.floats(0.1, 8.0),
+       st.randoms(use_true_random=False))
+def test_dual_solution_invariants(n, B, C, pyrng):
+    """For any data: alpha stays in the box, dual never exceeds primal."""
+    rng = np.random.default_rng(pyrng.randint(0, 2**31))
+    G = jnp.asarray(rng.normal(size=(n, B)).astype(np.float32))
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=n).astype(np.float32))
+    c = jnp.full((n,), C, jnp.float32)
+    res = solve_one(G, jnp.arange(n, dtype=jnp.int32), y, c,
+                    jnp.zeros((n,), jnp.float32),
+                    SolverConfig(tol=1e-2, max_epochs=300))
+    a = np.asarray(res.alpha)
+    assert a.min() >= -1e-6 and a.max() <= C + 1e-5
+    from repro.core.dual_solver import duality_gap
+    gap = float(duality_gap(G, jnp.arange(n, dtype=jnp.int32), y, c,
+                            res.alpha))
+    assert gap > -1e-2 * max(1.0, abs(float(res.dual_obj)))  # weak duality
+
+
+@given(st.integers(2, 6), st.integers(10, 60),
+       st.randoms(use_true_random=False))
+def test_ovo_tasks_partition_pairs(n_classes, n, pyrng):
+    """Every (pair, real row) has the right labels; padding is inert."""
+    rng = np.random.default_rng(pyrng.randint(0, 2**31))
+    labels = rng.integers(0, n_classes, size=n)
+    # ensure every class appears
+    labels[:n_classes] = np.arange(n_classes)
+    tasks, pairs = build_ovo_tasks(labels, n_classes, C=1.0)
+    assert len(pairs) == n_classes * (n_classes - 1) // 2
+    for t, (a, b) in enumerate(pairs):
+        c = np.asarray(tasks.c[t])
+        idx = np.asarray(tasks.idx[t])
+        y = np.asarray(tasks.y[t])
+        real = c > 0
+        assert real.sum() == np.isin(labels, [a, b]).sum()
+        assert set(labels[idx[real]]) <= {a, b}
+        np.testing.assert_array_equal(y[real] == 1.0, labels[idx[real]] == a)
+
+
+@given(st.integers(2, 5), st.integers(1, 30),
+       st.randoms(use_true_random=False))
+def test_ovo_vote_in_range(n_classes, m, pyrng):
+    rng = np.random.default_rng(pyrng.randint(0, 2**31))
+    pairs = class_pairs(n_classes)
+    d = rng.normal(size=(m, len(pairs)))
+    pred = ovo_vote(d, pairs, n_classes)
+    assert pred.shape == (m,)
+    assert pred.min() >= 0 and pred.max() < n_classes
+
+
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=1, max_side=8),
+                  elements=st.floats(-100, 100, allow_nan=False, width=16)),
+       st.randoms(use_true_random=False))
+def test_libsvm_roundtrip(x, pyrng):
+    import tempfile, os
+    rng = np.random.default_rng(pyrng.randint(0, 2**31))
+    y = rng.integers(0, 3, size=x.shape[0])
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.svm")
+        write_libsvm(path, x, y)
+        csr = read_libsvm(path, n_features=x.shape[1])
+        np.testing.assert_allclose(csr.densify(), x, rtol=1e-3, atol=1e-4)
+        np.testing.assert_array_equal(csr.labels.astype(int), y)

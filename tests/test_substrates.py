@@ -1,0 +1,112 @@
+"""Data pipeline, optimizers, checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.data import (TokenStream, make_blobs, make_checker,
+                        make_two_spirals, synthetic_token_batches,
+                        train_test_split)
+from repro.optim import adafactor, adamw, cosine_schedule, get_optimizer, sgd
+
+
+def test_split_disjoint(rng):
+    x, y = make_blobs(100, p=3)
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.25, seed=1)
+    assert len(xtr) == 75 and len(xte) == 25
+    all_rows = np.concatenate([xtr, xte])
+    assert np.unique(all_rows, axis=0).shape[0] == np.unique(x, axis=0).shape[0]
+
+
+def test_checker_labels_follow_grid():
+    x, y = make_checker(500, cells=2, noise=0.0)
+    want = ((np.floor(x[:, 0]) + np.floor(x[:, 1])) % 2).astype(int)
+    assert (y == want).mean() > 0.99
+
+
+def test_spirals_balanced():
+    x, y = make_two_spirals(400)
+    assert abs(y.mean() - 0.5) < 0.01
+    assert np.abs(x).max() < 2.0
+
+
+def test_token_stream_deterministic():
+    it1 = synthetic_token_batches(500, 2, 16, seed=3)
+    it2 = synthetic_token_batches(500, 2, 16, seed=3)
+    a, at = next(it1)
+    b, bt = next(it2)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a[:, 1:], at[:, :-1])   # shifted targets
+    assert a.max() < 500 and a.min() >= 0
+
+
+def test_token_stream_has_motif_structure():
+    ts = TokenStream(1000, seed=0, motif_prob=0.9)
+    seq = ts.sample(np.random.default_rng(0), 4000)
+    # high motif probability -> repeated (sliding) 8-grams appear
+    from collections import Counter
+    grams = Counter(tuple(seq[i:i + 8]) for i in range(3992))
+    assert grams.most_common(1)[0][1] > 3
+
+
+@pytest.mark.parametrize("make", [adamw, adafactor, sgd])
+def test_optimizer_converges_quadratic(make):
+    opt = make(lr=0.1)
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    st = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(p)
+        return opt.update(g, s, p)
+
+    for _ in range(150):
+        params, st = step(params, st)
+    assert float(jnp.abs(params["w"]).max()) < 0.15
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(lr=0.01)
+    params = {"w": jnp.ones((64, 32)), "b": jnp.ones((32,))}
+    st = opt.init(params)
+    vr, vc = st.inner["w"]
+    assert vr.shape == (64,) and vc.shape == (32,)     # O(r+c), not O(rc)
+    assert st.inner["b"].shape == (32,)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.int32(100))) < 1e-6
+    assert float(lr(jnp.int32(55))) < float(lr(jnp.int32(20)))
+
+
+def test_checkpoint_roundtrip_and_latest():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+            "nested": {"b": jnp.ones((4,), jnp.float32)},
+            "list": [jnp.zeros((2,)), jnp.full((3,), 7.0)]}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 5, tree)
+        save_checkpoint(d, 12, tree)
+        assert latest_step(d) == 12
+        back = load_checkpoint(d, 12, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    tree = {"a": jnp.ones((2, 3))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        with pytest.raises(ValueError):
+            load_checkpoint(d, 1, {"a": jnp.ones((3, 2))})
+
+
+def test_optimizer_unknown_name():
+    with pytest.raises(ValueError):
+        get_optimizer("adamax")

@@ -1,0 +1,113 @@
+"""LPDSVM estimator + OVO + CV/grid search + baselines (system behaviour)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import ExactDualSVM, LLSVMStyle, PrimalSGDSVM
+from repro.core import (KernelParams, LPDSVM, SolverConfig, cross_validate,
+                        grid_search)
+from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
+from repro.data import make_checker, make_multiclass, train_test_split
+
+
+def test_binary_accuracy(rng):
+    x, y = make_checker(1500, cells=3, seed=1)
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.3, seed=2)
+    svm = LPDSVM(KernelParams("rbf", gamma=8.0), C=16.0, budget=300, tol=1e-2)
+    svm.fit(xtr, ytr)
+    assert svm.error(xte, yte) < 0.12
+
+
+def test_close_to_exact_solver(rng):
+    x, y = make_checker(700, cells=2, seed=3)
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.3)
+    kp = KernelParams("rbf", gamma=4.0)
+    lpd = LPDSVM(kp, C=8.0, budget=350, tol=1e-2).fit(xtr, ytr)
+    exact = ExactDualSVM(kp, C=8.0, tol=1e-2).fit(xtr, ytr)
+    # paper Table 2: budget approximation costs only a little accuracy
+    assert lpd.error(xte, yte) <= exact.error(xte, yte) + 0.04
+
+
+def test_multiclass_ovo(rng):
+    x, y = make_multiclass(1200, p=10, n_classes=5, seed=4)
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.3)
+    svm = LPDSVM(KernelParams("rbf", gamma=0.05), C=8.0, budget=300, tol=1e-2)
+    svm.fit(xtr, ytr)
+    assert svm.stats.n_tasks == 10          # C(5,2)
+    err = svm.error(xte, yte)
+    assert err < 0.35                        # >> chance (0.8)
+
+
+def test_ovo_task_construction():
+    labels = np.array([0, 1, 2, 0, 1, 2, 0])
+    tasks, pairs = build_ovo_tasks(labels, 3, C=1.5)
+    assert pairs == class_pairs(3) == [(0, 1), (0, 2), (1, 2)]
+    t01 = 0
+    idx = np.asarray(tasks.idx[t01])
+    c = np.asarray(tasks.c[t01])
+    real = c > 0
+    assert real.sum() == 5                   # 3 zeros + 2 ones
+    assert set(labels[idx[real]]) == {0, 1}
+    y = np.asarray(tasks.y[t01])[real]
+    assert np.all(y[labels[idx[real]] == 0] == 1.0)
+
+
+def test_ovo_vote_tie_break():
+    # one sample, 3 classes, decisions crafted so votes are 1,1,1 -> class 0
+    pairs = class_pairs(3)
+    d = np.array([[+1.0, -1.0, +1.0]])      # 0 beats 1; 2 beats 0; 1 beats 2
+    assert ovo_vote(d, pairs, 3)[0] == 0
+
+
+def test_cross_validate_and_factor_reuse(rng):
+    x, y = make_multiclass(600, p=8, n_classes=3, seed=5)
+    err1, factor = cross_validate(x, y, KernelParams("rbf", gamma=0.1), C=4.0,
+                                  budget=200, folds=3)
+    err2, _ = cross_validate(x, y, KernelParams("rbf", gamma=0.1), C=8.0,
+                             budget=200, folds=3, factor=factor)
+    assert 0.0 <= err1 <= 1.0 and 0.0 <= err2 <= 1.0
+    assert err1 < 0.6 and err2 < 0.6
+
+
+def test_grid_search_warm_start_equivalence(rng):
+    """Warm-started grid must find the same error surface as cold starts."""
+    x, y = make_checker(600, cells=2, seed=6)
+    kw = dict(gammas=[2.0, 8.0], Cs=[1.0, 8.0], budget=150, folds=3,
+              config=SolverConfig(tol=1e-3, max_epochs=2000))
+    g_warm = grid_search(x, y, warm_start=True, **kw)
+    g_cold = grid_search(x, y, warm_start=False, **kw)
+    assert np.abs(g_warm.errors - g_cold.errors).max() < 0.03
+    assert g_warm.n_binary_solved == 2 * 2 * 3
+
+
+def test_llsvm_baseline_no_convergence_check(rng):
+    x, y = make_checker(800, cells=3, seed=7)
+    kp = KernelParams("rbf", gamma=8.0)
+    ll = LLSVMStyle(kp, C=16.0, budget=200, chunk_size=200).fit(x, y)
+    lpd = LPDSVM(kp, C=16.0, budget=200, tol=1e-3).fit(x, y)
+    # LPD (converged) must beat the single-pass fixed-epoch chunked scheme
+    assert lpd.error(x, y) <= ll.error(x, y) + 1e-9
+
+
+def test_primal_sgd_less_precise(rng):
+    """Paper sec. 2: dual methods reach precise solutions, SGD is rough."""
+    x, y = make_checker(800, cells=2, seed=8)
+    kp = KernelParams("rbf", gamma=4.0)
+    lpd = LPDSVM(kp, C=8.0, budget=200, tol=1e-3).fit(x, y)
+    sgd = PrimalSGDSVM(kp, C=8.0, budget=200, steps=1500, seed=8)
+    sgd.fit(x, y, factor=lpd.factor)
+    from repro.core.dual_solver import primal_objective
+    n = x.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    _, labels = np.unique(y, return_inverse=True)
+    y_pm = jnp.asarray(np.where(labels == 0, 1.0, -1.0), jnp.float32)
+    c = jnp.full((n,), 8.0, jnp.float32)
+    p_dual, _, _ = primal_objective(lpd.factor.G, idx, y_pm, c, lpd.W_[0])
+    p_sgd, _, _ = primal_objective(lpd.factor.G, idx, y_pm, c, sgd.w_)
+    assert float(p_dual) <= float(p_sgd) + 1e-3 * abs(float(p_sgd))
+
+
+def test_multiclass_rejected_by_llsvm():
+    x, y = make_multiclass(200, n_classes=3)
+    with pytest.raises(ValueError):
+        LLSVMStyle(KernelParams("rbf", gamma=0.1)).fit(x, y)

@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The three paper-level claims, reproduced at CPU scale:
+  1. the two-stage LPD solver reaches near-exact-solver accuracy (Table 2);
+  2. grid search + CV reuses stage 1 and warm starts (Table 3 mechanism);
+  3. the full deep-features -> OVO-SVM pipeline trains end to end (ImageNet
+     experiment in miniature).
+Plus: the LM training loop learns, and serving generates.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import ExactDualSVM
+from repro.core import KernelParams, LPDSVM, SolverConfig, grid_search
+from repro.data import make_checker, make_multiclass, train_test_split
+
+
+def test_claim1_near_exact_accuracy(rng):
+    x, y = make_checker(1200, cells=2, seed=21)
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.3)
+    kp = KernelParams("rbf", gamma=4.0)
+    lpd = LPDSVM(kp, C=8.0, budget=400, tol=1e-2).fit(xtr, ytr)
+    exact = ExactDualSVM(kp, C=8.0, tol=1e-2).fit(xtr, ytr)
+    e_lpd, e_exact = lpd.error(xte, yte), exact.error(xte, yte)
+    # paper: "LPD-SVM comes quite close to the (nearly exact) solutions"
+    assert e_lpd <= e_exact + 0.03, (e_lpd, e_exact)
+
+
+def test_claim2_grid_search_shares_stage1(rng):
+    x, y = make_multiclass(900, p=8, n_classes=3, seed=22)
+    res = grid_search(x, y, gammas=[0.05, 0.2], Cs=[1.0, 8.0], budget=200,
+                      folds=3, config=SolverConfig(tol=1e-2, max_epochs=600))
+    # 2 gammas x 2 Cs x 3 folds x 3 pairs = 36 binary SVMs, 2 stage-1 runs
+    assert res.n_binary_solved == 36
+    assert res.best_error < 0.5
+    # stage 2 (all 36 solves) must not be dwarfed by repeated stage-1 work:
+    # G was computed once per gamma, not once per cell
+    assert res.stage1_seconds < res.stage2_seconds * 10
+
+
+def test_claim3_backbone_features_to_svm():
+    from repro.launch.train_svm import class_conditioned_tokens, extract_features
+    from repro.configs import get_config
+    from repro.models import init_model
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    toks, y = class_conditioned_tokens(400, 4, 32, cfg.vocab_size, seed=5,
+                                       mix=0.6)
+    feats = extract_features(cfg, params, toks, batch=64)
+    assert feats.shape == (400, cfg.d_model)
+    d2 = ((feats[:128, None] - feats[None, :128]) ** 2).sum(-1)
+    gamma = 1.0 / np.median(d2[d2 > 0])
+    svm = LPDSVM(KernelParams("rbf", gamma=gamma), C=8.0, budget=128,
+                 tol=1e-2)
+    svm.fit(feats[:320], y[:320])
+    err = svm.error(feats[320:], y[320:])
+    assert err < 0.75 * 0.75  # clearly better than the 0.75 chance rate
+
+
+def test_lm_training_learns():
+    from repro.launch.train import train
+    losses = train("tinyllama-1.1b", reduced=True, steps=60, batch=4,
+                   seq=64, lr=2e-3, log_every=100)
+    assert min(losses[-5:]) < losses[0] * 0.75
+
+
+def test_serving_generates():
+    from repro.launch.serve import serve
+    out = serve("qwen3-0.6b", reduced=True, batch=2, prompt_len=8, gen=8)
+    assert out.shape == (2, 8)
+    assert out.min() >= 0
