@@ -1,0 +1,28 @@
+# One-word entry points for the verify / bench / lint loops.
+#
+#   make test        tier-1 suite (the invocation ROADMAP.md pins)
+#   make bench       stage-1 streaming scaling curve -> BENCH_streaming.json
+#   make bench-all   every benchmark suite (paper tables + streaming)
+#   make lint        byte-compile + import smoke over all python trees
+#
+# The container is CPU-only; Pallas kernels run with interpret=True there and
+# compile to Mosaic on TPU — same commands either way.
+
+PY       ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench bench-all lint
+
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) -m benchmarks.run streaming
+
+bench-all:
+	$(PY) -m benchmarks.run
+
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples
+	$(PY) -c "import repro, repro.core, repro.kernels, repro.launch, \
+	repro.models, repro.baselines, repro.data, repro.analysis"

@@ -12,7 +12,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (eigdrop, fig3_stages, kernel_micro, shrinking,
-                            table2_solvers, table3_cv_grid)
+                            streaming, table2_solvers, table3_cv_grid)
     suites = {
         "table2": table2_solvers.run,
         "table3": table3_cv_grid.run,
@@ -20,6 +20,7 @@ def main() -> None:
         "fig3": fig3_stages.run,
         "eigdrop": eigdrop.run,
         "kernels": kernel_micro.run,
+        "streaming": streaming.run,
     }
     picked = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

@@ -1,0 +1,95 @@
+"""Stage-1 scaling curve: chunked out-of-core pipeline vs monolithic path.
+
+For each n the same (landmarks, projector) pair is timed through
+  * the monolithic device-resident projection (one gram + one matmul), and
+  * the chunked host-resident pipeline at several chunk sizes / prefetch
+    depths (`core/streaming.py`),
+reporting rows/second.  Besides the CSV rows every suite emits, the full
+record set is written to ``BENCH_streaming.json`` so the BENCH trajectory
+can track the stage-1 scaling curve across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run streaming
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import KernelParams, StreamConfig, auto_chunk_rows
+from repro.core.kernel_fn import gram
+from repro.core.nystrom import _eig_projector, select_landmarks
+from repro.core.streaming import stream_factor_rows
+from repro.data import make_checker
+
+OUT_PATH = os.environ.get("BENCH_STREAMING_JSON", "BENCH_streaming.json")
+
+# (n, budget); overridable for quick smoke runs
+SIZES = ((2_000, 128), (8_000, 256), (20_000, 256))
+CHUNKS = (1_024, 4_096)
+PREFETCH = (1, 2)
+
+
+def _stage1_inputs(n: int, budget: int, gamma: float = 8.0):
+    x_np, _ = make_checker(n, cells=3, seed=11)
+    kp = KernelParams("rbf", gamma=gamma)
+    lm = select_landmarks(jnp.asarray(x_np), budget, jax.random.PRNGKey(0))
+    projector, _, _ = _eig_projector(gram(lm, lm, kp), kp, 1e-6)
+    return x_np, lm, projector, kp
+
+
+def run() -> None:
+    records = []
+    for n, budget in SIZES:
+        x_np, lm, projector, kp = _stage1_inputs(n, budget)
+        x_dev = jnp.asarray(x_np)
+
+        def mono():
+            (gram(x_dev, lm, kp) @ projector).block_until_ready()
+
+        t = timeit(mono)
+        emit(f"stage1_mono_n{n}_B{budget}", t * 1e6, f"{n / t:.0f} rows/s")
+        records.append({"mode": "monolithic", "n": n, "budget": budget,
+                        "chunk_rows": n, "prefetch": 1,
+                        "seconds": t, "rows_per_s": n / t})
+
+        for chunk in CHUNKS:
+            if chunk >= n:
+                continue
+            for pf in PREFETCH:
+                out = np.empty((n, projector.shape[1]), np.float32)
+
+                def chunked():
+                    stream_factor_rows(x_np, lm, projector, kp,
+                                       chunk_rows=chunk, prefetch=pf, out=out)
+
+                t = timeit(chunked)
+                emit(f"stage1_stream_n{n}_B{budget}_c{chunk}_pf{pf}",
+                     t * 1e6, f"{n / t:.0f} rows/s")
+                records.append({"mode": "streamed", "n": n, "budget": budget,
+                                "chunk_rows": chunk, "prefetch": pf,
+                                "seconds": t, "rows_per_s": n / t})
+
+        # what the auto-router would pick at the default 2 GiB budget
+        auto = auto_chunk_rows(n, x_np.shape[1], budget, StreamConfig())
+        records.append({"mode": "auto_chunk", "n": n, "budget": budget,
+                        "chunk_rows": auto, "prefetch": StreamConfig().prefetch,
+                        "seconds": None, "rows_per_s": None})
+
+    payload = {"benchmark": "stage1_streaming",
+               "backend": jax.default_backend(),
+               "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+               "records": records}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {OUT_PATH} ({len(records)} records)", flush=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

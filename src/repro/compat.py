@@ -1,0 +1,110 @@
+"""Compatibility shims over the jax API surface that moved between releases.
+
+The repo targets the modern jax API (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``, ``check_vma=``); the container pins an older jax
+where those live elsewhere (``jax.experimental.shard_map``, ``with mesh:``,
+``check_rep=``) or do not exist at all.  Everything version-dependent funnels
+through this module so call sites stay written against ONE surface:
+
+    from repro.compat import AxisType, make_mesh, set_mesh, shard_map
+
+On a new-enough jax these are straight re-exports; on the pinned jax they are
+thin adapters with identical semantics for everything this repo uses.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+from typing import Any, Optional, Sequence
+
+import jax
+
+# --------------------------------------------------------------------- AxisType
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    _HAS_AXIS_TYPE = True
+except ImportError:  # pinned jax: meshes have no axis types; accept + ignore
+    _HAS_AXIS_TYPE = False
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+# --------------------------------------------------------------------- make_mesh
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, axis_types: Optional[Sequence[Any]] = None,
+              devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` that tolerates ``axis_types`` on every jax version."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if _HAS_AXIS_TYPE and axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=tuple(axis_types), **kwargs)
+        except TypeError:
+            pass  # AxisType exists but make_mesh predates the kwarg
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+# --------------------------------------------------------------------- set_mesh
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh: jax.sharding.Mesh):  # type: ignore[no-redef]
+        """Ambient-mesh scope: ``with mesh:`` plays ``jax.set_mesh`` on old jax.
+
+        Entering the Mesh sets the resource env, which is what makes bare
+        ``PartitionSpec`` in ``with_sharding_constraint`` resolve — the only
+        ambient behaviour this repo relies on.
+        """
+        with mesh:
+            yield mesh
+
+
+# ------------------------------------------------- pallas TPU compiler params
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across its ``TPUCompilerParams`` rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+# ------------------------------------------------------------ get_abstract_mesh
+def get_abstract_mesh():
+    """Ambient mesh set by `set_mesh`, or None when no mesh scope is active.
+
+    New jax returns an (possibly empty) AbstractMesh; old jax keeps the
+    ambient mesh in the thread-local resource env that ``with mesh:`` fills.
+    Callers must treat both None and an empty ``.shape`` as "no mesh".
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as _mesh_lib
+    m = _mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+# -------------------------------------------------------------------- shard_map
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+    _REP_KWARG = "check_vma"
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _REP_KWARG = "check_rep"
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              **kwargs):
+    """``jax.shard_map`` signature, replication-check kwarg renamed as needed.
+
+    Usable both as ``shard_map(f, mesh=..., ...)`` and as a decorator factory
+    via ``functools.partial(shard_map, mesh=..., ...)``.
+    """
+    kwargs[_REP_KWARG] = check_vma
+    if f is None:
+        return lambda fn: _shard_map_impl(fn, mesh=mesh, in_specs=in_specs,
+                                          out_specs=out_specs, **kwargs)
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)

@@ -6,7 +6,10 @@ from repro.core.dual_solver import (SolverConfig, TaskBatch, SolveResult,
 from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
 from repro.core.svm import LPDSVM
 from repro.core.cv import grid_search, cross_validate, kfold_masks
-from repro.core.distributed import solve_tasks_sharded
+from repro.core.distributed import solve_tasks_sharded, stream_factor_over_mesh
+from repro.core.streaming import (StreamConfig, auto_chunk_rows,
+                                  compute_factor_streamed, should_stream,
+                                  stream_factor_rows)
 
 __all__ = [
     "KernelParams", "gram", "kernel_diag",
@@ -14,5 +17,7 @@ __all__ = [
     "SolverConfig", "TaskBatch", "SolveResult", "solve_one", "solve_batch",
     "duality_gap", "build_ovo_tasks", "class_pairs", "ovo_vote",
     "LPDSVM", "grid_search", "cross_validate", "kfold_masks",
-    "solve_tasks_sharded",
+    "solve_tasks_sharded", "stream_factor_over_mesh",
+    "StreamConfig", "auto_chunk_rows", "compute_factor_streamed",
+    "should_stream", "stream_factor_rows",
 ]

@@ -24,8 +24,9 @@ import numpy as np
 
 from repro.core.dual_solver import SolverConfig, TaskBatch, solve_batch
 from repro.core.kernel_fn import KernelParams, gram
-from repro.core.nystrom import LowRankFactor, compute_factor
+from repro.core.nystrom import LowRankFactor, compute_factor, wait_for_factor
 from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
+from repro.core.streaming import StreamConfig
 
 
 def kfold_masks(n: int, k: int, seed: int = 0) -> List[np.ndarray]:
@@ -117,6 +118,8 @@ def grid_search(
     solve_fn: Callable = solve_batch,
     warm_start: bool = True,
     warm_start_gamma: bool = False,
+    stream: Optional[bool] = None,
+    stream_config: Optional[StreamConfig] = None,
 ) -> GridResult:
     """Full grid search with k-fold CV, G reuse per gamma, warm starts over C.
 
@@ -146,9 +149,10 @@ def grid_search(
     for gi, gamma in enumerate(gammas):
         kp = KernelParams(kind=kernel_kind, gamma=float(gamma))
         t0 = time.perf_counter()
-        factor = compute_factor(jnp.asarray(x), kp, budget,
-                                key=jax.random.PRNGKey(seed), gram_fn=gram_fn)
-        factor.G.block_until_ready()
+        factor = compute_factor(x, kp, budget,
+                                key=jax.random.PRNGKey(seed), gram_fn=gram_fn,
+                                stream=stream, stream_config=stream_config)
+        wait_for_factor(factor.G)
         t_stage1 += time.perf_counter() - t0
 
         warm = warm_first_c if warm_start_gamma else None
@@ -182,14 +186,17 @@ def cross_validate(
     budget: int = 500, folds: int = 5, config: SolverConfig = SolverConfig(),
     seed: int = 0, gram_fn: Callable = gram, solve_fn: Callable = solve_batch,
     factor: Optional[LowRankFactor] = None,
+    stream: Optional[bool] = None,
+    stream_config: Optional[StreamConfig] = None,
 ) -> Tuple[float, LowRankFactor]:
     """k-fold CV error for one (kernel, C); returns (error, reusable factor)."""
     x = np.asarray(x, np.float32)
     _, labels = np.unique(np.asarray(y), return_inverse=True)
     n_classes = int(labels.max()) + 1
     if factor is None:
-        factor = compute_factor(jnp.asarray(x), kernel, budget,
-                                key=jax.random.PRNGKey(seed), gram_fn=gram_fn)
+        factor = compute_factor(x, kernel, budget,
+                                key=jax.random.PRNGKey(seed), gram_fn=gram_fn,
+                                stream=stream, stream_config=stream_config)
     val_masks = kfold_masks(x.shape[0], folds, seed)
     tasks, _ = build_cv_tasks(labels, n_classes, float(C), val_masks)
     res = solve_fn(factor.G, tasks, config)

@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.core.dual_solver import SolveResult, SolverConfig, TaskBatch, solve_batch
 from repro.core.kernel_fn import KernelParams, apply_epilogue
@@ -157,3 +158,64 @@ def stage1_project_sharded_v2(mesh: Mesh, row_axes: Sequence[str] = ("data",),
 
 def replicate(mesh: Mesh, x):
     return jax.device_put(x, NamedSharding(mesh, P(*((None,) * x.ndim))))
+
+
+# ---------------------------------------------------------------------------
+# Stage 1 out-of-core over a mesh: disjoint row-chunk streams per device
+# ---------------------------------------------------------------------------
+
+def stream_factor_over_mesh(
+    mesh: Mesh,
+    x,
+    landmarks,
+    projector,
+    params: KernelParams,
+    *,
+    chunk_rows: int,
+    prefetch: int = 2,
+    gram_fn=None,
+    out=None,
+):
+    """Chunked stage-1 G over every device of `mesh` (host-resident x and G).
+
+    The complement of `stage1_gram_sharded`: that path assumes the full
+    (n, p) x and (n, B) K_nm fit *sharded across* the mesh; this one assumes
+    they only fit in host RAM.  Row chunks are handed round-robin to the
+    flattened mesh devices, so each device owns a disjoint chunk stream with
+    its own resident landmark/projector replica and its own double-buffered
+    H2D/compute/D2H overlap — no collectives at all in stage 1, matching the
+    paper's embarrassingly-row-parallel gram computation.  The replicated
+    stage-2 task farm (`solve_tasks_sharded`) consumes the resulting G
+    unchanged.
+    """
+    from repro.core.kernel_fn import gram as _gram_ref
+    from repro.core.streaming import stream_factor_rows
+
+    # Only this process's devices: device_put to another host's chip raises.
+    # Multi-host meshes stream their own row range per host (ROADMAP item).
+    devices = list(mesh.local_devices)
+    return stream_factor_rows(
+        x, landmarks, projector, params, chunk_rows=chunk_rows,
+        prefetch=prefetch, gram_fn=gram_fn or _gram_ref, out=out,
+        devices=devices)
+
+
+def compute_factor_streamed_mesh(
+    mesh: Mesh,
+    x,
+    params: KernelParams,
+    budget: int,
+    *,
+    key=None,
+    stream_config=None,
+    gram_fn=None,
+):
+    """`streaming.compute_factor_streamed` with the chunk streams spread over
+    `mesh` — the full two-stage entry point for a multi-device host."""
+    from repro.core.kernel_fn import gram as _gram_ref
+    from repro.core.streaming import StreamConfig, compute_factor_streamed
+
+    devices = list(mesh.local_devices)
+    return compute_factor_streamed(
+        x, params, budget, key=key, config=stream_config or StreamConfig(),
+        gram_fn=gram_fn or _gram_ref, devices=devices)

@@ -44,6 +44,8 @@ class LowRankFactor:
     eigvals: jnp.ndarray          # (B,) spectrum of K_mm (descending)
     effective_rank: int           # B' after eigenvalue dropping
     kernel: KernelParams
+    streamed: bool = False        # True -> G is a host-resident numpy buffer
+                                  # produced by the out-of-core chunked path
 
     @property
     def n(self) -> int:
@@ -57,6 +59,13 @@ class LowRankFactor:
         """Map new points into the low-rank feature space (prediction path)."""
         k_xm = gram(x, self.landmarks, self.kernel)
         return k_xm @ self.projector
+
+
+def wait_for_factor(G) -> None:
+    """Block until a factor's G is ready: device arrays wait on the async
+    dispatch queue, a streamed (host numpy) G is ready by construction."""
+    if hasattr(G, "block_until_ready"):
+        G.block_until_ready()
 
 
 def select_landmarks(x: jnp.ndarray, budget: int, key: jax.Array) -> jnp.ndarray:
@@ -99,6 +108,8 @@ def compute_factor(
     compact: bool = True,
     block_rows: int = 65536,
     gram_fn=gram,
+    stream: Optional[bool] = None,
+    stream_config=None,
 ) -> LowRankFactor:
     """Run stage 1: landmarks -> K_mm -> eigh (+drop) -> G = K_nm @ projector.
 
@@ -107,9 +118,28 @@ def compute_factor(
     ``block_rows`` streams K_nm row-blocks so the (n, B) intermediate never
     coexists with a second (n, B) temporary — the paper's "streaming fashion"
     requirement for G bigger than GPU memory.
+
+    Out-of-core routing: ``stream=True`` forces the chunked host-resident
+    pipeline (`core/streaming.py`); ``stream=None`` with a ``stream_config``
+    auto-routes when the monolithic working set exceeds the config's device
+    budget; ``stream=False`` (or no config) keeps the device-resident path.
     """
+    from repro.core import streaming as _streaming
+
     if key is None:
         key = jax.random.PRNGKey(0)
+
+    if not hasattr(x, "shape"):
+        x = np.asarray(x, np.float32)
+    n, p = x.shape
+    if stream is None and stream_config is not None:
+        stream = _streaming.should_stream(n, p, min(budget, n), stream_config)
+    if stream:
+        cfg = stream_config or _streaming.StreamConfig()
+        return _streaming.compute_factor_streamed(
+            x, params, budget, key=key, eig_rtol=eig_rtol, config=cfg,
+            gram_fn=gram_fn)
+
     x = jnp.asarray(x, dtype=jnp.float32)
     n = x.shape[0]
     landmarks = select_landmarks(x, budget, key)

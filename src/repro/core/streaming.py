@@ -1,0 +1,224 @@
+"""Out-of-core stage 1: stream the Nyström factor G in row chunks.
+
+The paper's "more RAM" ingredient: the dataset and the (n, B') factor G live
+in *host* memory (512 GB class), while the accelerator only ever holds one
+row chunk's working set — the landmark block, the projector, and a few chunks
+in flight.  That decouples the trainable n from device memory:
+
+    host RAM                          device HBM
+    ────────────────────────────      ─────────────────────────────
+    x        (n, p)   read-only       landmarks  (B, p)    resident
+    G        (n, B')  preallocated    projector  (B, B')   resident
+                                      per chunk: x[s:e], K_chunk, G_chunk
+
+The streaming loop exploits jax's async dispatch as the double buffer:
+``jax.device_put`` of chunk k+1 and the Pallas ``gram`` launch for it are
+enqueued while chunk k's result is still being fetched to host — the host
+only blocks on the *oldest* in-flight chunk (``prefetch`` controls the queue
+depth).  On TPU/GPU that overlaps H2D copy, MXU compute, and D2H copy; on the
+CPU container it degrades gracefully to sequential execution with identical
+numerics, which is what the tests pin down.
+
+Passing ``devices`` round-robins disjoint chunk streams over several devices
+(each with its own resident landmark/projector replica) —
+`core/distributed.py` wraps that for a mesh.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernel_fn import KernelParams, gram
+
+BYTES_F32 = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Knobs of the chunked stage-1 pipeline (all sizes in rows / bytes).
+
+    ``device_budget_bytes`` is the stage-1 *working set* allowance on one
+    device, not the physical HBM size — leave headroom for the stage-2 solver
+    (G rows get re-materialised there) and the runtime itself.
+    """
+
+    device_budget_bytes: int = 2 << 30   # 2 GiB default working-set allowance
+    chunk_rows: Optional[int] = None     # None -> derived from the budget
+    prefetch: int = 2                    # chunks in flight (double buffering)
+    min_chunk_rows: int = 256
+
+    def __post_init__(self):
+        if self.prefetch < 1:
+            raise ValueError("prefetch must be >= 1")
+        if self.chunk_rows is not None and self.chunk_rows < 1:
+            raise ValueError("chunk_rows must be positive")
+
+
+def resident_bytes(p: int, budget: int) -> int:
+    """Device-resident stage-1 state: landmark block + projector."""
+    return (budget * p + budget * budget) * BYTES_F32
+
+
+def chunk_bytes(rows: int, p: int, budget: int) -> int:
+    """Working set of ONE in-flight chunk: input rows, K block, G block."""
+    return rows * (p + 2 * budget) * BYTES_F32
+
+
+def monolithic_bytes(n: int, p: int, budget: int) -> int:
+    """Device working set of the one-shot path: x, K_nm, G all live at once."""
+    return (n * p + 2 * n * budget) * BYTES_F32 + resident_bytes(p, budget)
+
+
+def should_stream(n: int, p: int, budget: int, cfg: StreamConfig) -> bool:
+    """True when the monolithic stage-1 working set blows the device budget."""
+    return monolithic_bytes(n, p, budget) > cfg.device_budget_bytes
+
+
+def auto_chunk_rows(n: int, p: int, budget: int, cfg: StreamConfig) -> int:
+    """Largest chunk whose `prefetch` in-flight copies fit the budget.
+
+    Solves  prefetch * chunk_bytes(r) + resident <= device_budget  for r,
+    clamped to [min_chunk_rows, n] — the floor keeps tiny budgets from
+    degenerating into per-row dispatch (latency-bound), accepting a mild
+    budget overshoot instead.
+    """
+    if cfg.chunk_rows is not None:
+        return min(cfg.chunk_rows, n)
+    free = cfg.device_budget_bytes - resident_bytes(p, budget)
+    per_row = cfg.prefetch * (p + 2 * budget) * BYTES_F32
+    rows = free // per_row if free > 0 else 0
+    return int(min(n, max(cfg.min_chunk_rows, rows)))
+
+
+@partial(jax.jit, static_argnames=("params", "gram_fn"))
+def _chunk_features(xb, landmarks, projector, params: KernelParams, gram_fn):
+    """One chunk's G rows: K(x_chunk, landmarks) @ projector, fused under jit."""
+    return gram_fn(xb, landmarks, params) @ projector
+
+
+def stream_factor_rows(
+    x,
+    landmarks: jnp.ndarray,
+    projector: jnp.ndarray,
+    params: KernelParams,
+    *,
+    chunk_rows: int,
+    prefetch: int = 2,
+    gram_fn: Callable = gram,
+    out: Optional[np.ndarray] = None,
+    devices: Optional[Sequence] = None,
+) -> np.ndarray:
+    """Fill a host-resident G = K(x, landmarks) @ projector, chunk by chunk.
+
+    ``x`` stays on host (numpy); each chunk is ``jax.device_put`` and the
+    gram+project launch dispatched asynchronously, with at most ``prefetch``
+    chunks in flight per device before the host blocks on the oldest one and
+    copies it into the preallocated ``out`` buffer.  Passing ``devices``
+    round-robins *disjoint* chunk streams across them (landmarks/projector
+    replicated once per device up front).
+    """
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    rank = projector.shape[1]
+    if out is None:
+        out = np.empty((n, rank), np.float32)
+    if out.shape != (n, rank):
+        raise ValueError(f"out buffer {out.shape} != {(n, rank)}")
+    if devices is None:
+        devices = [None]
+
+    # One resident replica of the landmark block per device.
+    resident = []
+    for d in devices:
+        if d is None:
+            resident.append((jnp.asarray(landmarks, jnp.float32),
+                             jnp.asarray(projector, jnp.float32)))
+        else:
+            resident.append((jax.device_put(np.asarray(landmarks, np.float32), d),
+                             jax.device_put(np.asarray(projector, np.float32), d)))
+
+    inflight = collections.deque()  # (start, end, device_array)
+
+    def drain_one():
+        s, e, gb = inflight.popleft()
+        out[s:e] = np.asarray(gb)   # blocks on this chunk only
+
+    max_inflight = prefetch * len(devices)
+    starts = range(0, n, chunk_rows)
+    for i, s in enumerate(starts):
+        e = min(s + chunk_rows, n)
+        d = devices[i % len(devices)]
+        lm, pr = resident[i % len(devices)]
+        xb = x[s:e]
+        xb = jnp.asarray(xb) if d is None else jax.device_put(xb, d)
+        gb = _chunk_features(xb, lm, pr, params, gram_fn)
+        inflight.append((s, e, gb))
+        if len(inflight) >= max_inflight:
+            drain_one()
+    while inflight:
+        drain_one()
+    return out
+
+
+def compute_factor_streamed(
+    x,
+    params: KernelParams,
+    budget: int,
+    *,
+    key: Optional[jax.Array] = None,
+    eig_rtol: Optional[float] = None,
+    config: StreamConfig = StreamConfig(),
+    gram_fn: Callable = gram,
+    devices: Optional[Sequence] = None,
+):
+    """Out-of-core stage 1: same artifact as `nystrom.compute_factor`, but G
+    is a host-resident numpy buffer filled by the chunked pipeline.
+
+    The landmark eigendecomposition is unchanged (B x B fits any device); only
+    the (n, B) gram + projection — the part that scales with n — streams.
+    """
+    from repro.core import nystrom  # deferred: nystrom routes back into us
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if eig_rtol is None:
+        eig_rtol = nystrom.DEFAULT_EIG_RTOL
+    x = np.asarray(x, np.float32)
+    n, p = x.shape
+
+    if budget >= n:
+        landmarks = jnp.asarray(x, jnp.float32)
+    else:
+        landmarks = jnp.asarray(_select_landmarks_host(x, budget, key),
+                                jnp.float32)
+    k_mm = gram_fn(landmarks, landmarks, params)
+    projector, evals, rank = nystrom._eig_projector(k_mm, params, eig_rtol)
+    rank = int(rank)
+    projector = projector[:, :rank]
+
+    chunk = auto_chunk_rows(n, p, landmarks.shape[0], config)
+    G = stream_factor_rows(
+        x, landmarks, projector, params, chunk_rows=chunk,
+        prefetch=config.prefetch, gram_fn=gram_fn, devices=devices)
+
+    return nystrom.LowRankFactor(
+        G=G, landmarks=landmarks, projector=projector, eigvals=evals,
+        effective_rank=rank, kernel=params, streamed=True)
+
+
+def _select_landmarks_host(x: np.ndarray, budget: int, key) -> np.ndarray:
+    """Landmark sample without shipping the full x to device first.
+
+    `nystrom.select_landmarks` takes device-resident x; at out-of-core scale
+    that defeats the purpose, so gather the B rows on host from the same
+    jax-derived permutation (bit-identical landmark set for a given key).
+    """
+    idx = np.asarray(jax.random.choice(key, x.shape[0], shape=(budget,),
+                                       replace=False))
+    return x[idx]

@@ -20,8 +20,9 @@ import numpy as np
 
 from repro.core.dual_solver import SolveResult, SolverConfig, TaskBatch, solve_batch
 from repro.core.kernel_fn import KernelParams, gram
-from repro.core.nystrom import LowRankFactor, compute_factor
+from repro.core.nystrom import LowRankFactor, compute_factor, wait_for_factor
 from repro.core.ovo import build_ovo_tasks, ovo_decision_values, ovo_vote
+from repro.core.streaming import StreamConfig
 
 
 @dataclasses.dataclass
@@ -34,6 +35,7 @@ class FitStats:
     epochs: Optional[np.ndarray] = None
     violations: Optional[np.ndarray] = None
     effective_rank: int = 0
+    stage1_streamed: bool = False   # True -> G came from the out-of-core path
 
 
 class LPDSVM:
@@ -48,6 +50,8 @@ class LPDSVM:
         seed: int = 0,
         gram_fn: Callable = gram,
         solve_fn: Callable = solve_batch,
+        stream: Optional[bool] = None,
+        stream_config: Optional[StreamConfig] = None,
     ):
         self.kernel = kernel
         self.C = float(C)
@@ -56,6 +60,11 @@ class LPDSVM:
         self.seed = seed
         self.gram_fn = gram_fn
         self.solve_fn = solve_fn
+        # Out-of-core stage 1: `stream` forces it, `stream_config`'s device
+        # budget auto-routes it (see core/streaming.py); both None -> always
+        # the monolithic device-resident path.
+        self.stream = stream
+        self.stream_config = stream_config
         # fitted state
         self.factor: Optional[LowRankFactor] = None
         self.classes_: Optional[np.ndarray] = None
@@ -70,12 +79,18 @@ class LPDSVM:
         """Compute (or return the cached) low-rank factor G for `x`."""
         if self.factor is None:
             t0 = time.perf_counter()
+            if self.stream or self.stream_config is not None:
+                # Host numpy in, so the streamed path never materialises the
+                # full x on device; the monolithic path converts internally.
+                x = np.asarray(x, np.float32)
             self.factor = compute_factor(
-                jnp.asarray(x, jnp.float32), self.kernel, self.budget,
-                key=jax.random.PRNGKey(self.seed), gram_fn=self.gram_fn)
-            self.factor.G.block_until_ready()
+                x, self.kernel, self.budget,
+                key=jax.random.PRNGKey(self.seed), gram_fn=self.gram_fn,
+                stream=self.stream, stream_config=self.stream_config)
+            wait_for_factor(self.factor.G)
             self.stats.stage1_seconds = time.perf_counter() - t0
             self.stats.effective_rank = self.factor.effective_rank
+            self.stats.stage1_streamed = self.factor.streamed
         return self.factor
 
     # ------------------------------------------------------------------ stage 2

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.core.kernel_fn import KernelParams
 
 
@@ -94,7 +95,7 @@ def gram_pallas(x: jnp.ndarray, z: jnp.ndarray, params: KernelParams,
             pltpu.VMEM((tn, 1), jnp.float32),    # ||x_i||^2
             pltpu.VMEM((1, tm), jnp.float32),    # ||z_j||^2
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, z)

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 Q_FLOOR = 1e-12
 
 
@@ -138,7 +140,7 @@ def smo_epoch_pallas(G, y, c, q, alpha, unchanged, w, *,
             pltpu.VMEM((1, B), jnp.float32),   # w scratchpad (the SM trick)
             pltpu.VMEM((1, 1), jnp.float32),   # running max violation
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(G, y, c, q, alpha, unchanged, w)

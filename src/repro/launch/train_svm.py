@@ -81,7 +81,17 @@ def main():
     ap.add_argument("--budget", type=int, default=256)
     ap.add_argument("--C", type=float, default=8.0)
     ap.add_argument("--gamma", type=float, default=None)
+    ap.add_argument("--device-budget-mb", type=float, default=0.0,
+                    help="stage-1 device working-set budget; >0 auto-routes "
+                         "to the out-of-core chunked pipeline when exceeded")
+    ap.add_argument("--chunk-rows", type=int, default=0,
+                    help="fixed streaming chunk size (0 = derive from budget; "
+                         "without --device-budget-mb this forces streaming)")
+    ap.add_argument("--stream", action="store_true",
+                    help="force the chunked stage-1 pipeline regardless of budget")
     args = ap.parse_args()
+    if args.chunk_rows < 0:
+        ap.error(f"--chunk-rows must be >= 0, got {args.chunk_rows}")
 
     cfg = get_config(args.arch, reduced=True)
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
@@ -97,13 +107,26 @@ def main():
         d2 = ((sub[:, None] - sub[None]) ** 2).sum(-1)
         args.gamma = 1.0 / np.median(d2[d2 > 0])
     n_tr = int(args.n * 0.8)
+    stream_config = None
+    # An explicit chunk size with no budget is a request to stream, not a hint
+    # to the (roomy) default budget; --stream always forces.
+    force = args.stream or (args.chunk_rows > 0 and args.device_budget_mb <= 0)
+    if args.device_budget_mb > 0 or args.chunk_rows > 0 or args.stream:
+        from repro.core import StreamConfig
+        stream_config = StreamConfig(
+            device_budget_bytes=int(args.device_budget_mb * 2**20) or 2 << 30,
+            chunk_rows=args.chunk_rows or None)
     svm = LPDSVM(KernelParams("rbf", gamma=args.gamma), C=args.C,
-                 budget=args.budget, tol=1e-2)
+                 budget=args.budget, tol=1e-2,
+                 stream=True if force else None,
+                 stream_config=stream_config)
     svm.fit(feats[:n_tr], y[:n_tr])
     err = svm.error(feats[n_tr:], y[n_tr:])
     print(f"features: {feats.shape} in {t_feat:.1f}s")
     print(f"stage1 {svm.stats.stage1_seconds:.2f}s (rank "
-          f"{svm.stats.effective_rank})  stage2 {svm.stats.stage2_seconds:.2f}s "
+          f"{svm.stats.effective_rank}"
+          f"{', streamed' if svm.stats.stage1_streamed else ''})  "
+          f"stage2 {svm.stats.stage2_seconds:.2f}s "
           f"({svm.stats.n_tasks} binary SVMs)")
     print(f"test error: {err:.4f} (chance {1 - 1/args.classes:.2f})")
     return err

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh
+
 # ---------------------------------------------------------------------------
 # logical -> physical axis resolution
 # ---------------------------------------------------------------------------
@@ -150,7 +152,7 @@ def shard(x, *logical):
     rematerialization (replicate + reshard), which is both a memory and a
     collective disaster.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.shape:
         return x
     resolve = logical_to_physical(mesh.axis_names)

@@ -1,5 +1,7 @@
 """Property-based tests (hypothesis) on the system's invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # not baked into the container
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax.numpy as jnp
