@@ -1,7 +1,9 @@
 # One-word entry points for the verify / bench / lint loops.
 #
 #   make test        tier-1 suite (the invocation ROADMAP.md pins)
-#   make bench       stage-1 streaming scaling curve -> BENCH_streaming.json
+#   make bench       out-of-core curves -> BENCH_streaming.json +
+#                    BENCH_stage2_stream.json
+#   make bench-smoke same suites at smoke sizes (fast CI loop)
 #   make bench-all   every benchmark suite (paper tables + streaming)
 #   make lint        byte-compile + import smoke over all python trees
 #
@@ -11,13 +13,20 @@
 PY       ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-all lint
+.PHONY: test bench bench-smoke bench-all lint
 
 test:
 	$(PY) -m pytest -x -q
 
 bench:
-	$(PY) -m benchmarks.run streaming
+	$(PY) -m benchmarks.run streaming stage2
+
+# smoke-sized records must not clobber the committed BENCH_*.json trajectory
+bench-smoke:
+	BENCH_SMOKE=1 \
+	BENCH_STREAMING_JSON=/tmp/BENCH_streaming.smoke.json \
+	BENCH_STAGE2_STREAM_JSON=/tmp/BENCH_stage2_stream.smoke.json \
+	$(PY) -m benchmarks.run streaming stage2
 
 bench-all:
 	$(PY) -m benchmarks.run

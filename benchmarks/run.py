@@ -12,7 +12,8 @@ import sys
 
 def main() -> None:
     from benchmarks import (eigdrop, fig3_stages, kernel_micro, shrinking,
-                            streaming, table2_solvers, table3_cv_grid)
+                            stage2_stream, streaming, table2_solvers,
+                            table3_cv_grid)
     suites = {
         "table2": table2_solvers.run,
         "table3": table3_cv_grid.run,
@@ -21,6 +22,7 @@ def main() -> None:
         "eigdrop": eigdrop.run,
         "kernels": kernel_micro.run,
         "streaming": streaming.run,
+        "stage2": stage2_stream.run,
     }
     picked = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

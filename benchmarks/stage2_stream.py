@@ -1,0 +1,118 @@
+"""Stage-2 scaling: streamed row-block SMO vs the monolithic jit solver.
+
+For each problem size the same (G, TaskBatch) pair is solved by
+  * the monolithic `solve_batch` (full G re-materialised on device), and
+  * the chunked `solve_batch_streamed` at several tile sizes
+    (`core/solver_stream.py`),
+reporting coordinate visits/second and — the point of the exercise — the H2D
+bytes streamed per epoch, which drop as shrinking compacts the active-row
+union (the paper's "memory demand for the relevant sub-matrix of G reduces",
+turned into bandwidth savings).  The full record set is written to
+``BENCH_stage2_stream.json`` for the BENCH trajectory.
+
+    PYTHONPATH=src python -m benchmarks.run stage2
+    BENCH_SMOKE=1 PYTHONPATH=src python -m benchmarks.run stage2   # fast
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import (KernelParams, SolverConfig, StreamConfig,
+                        compute_factor, solve_batch, solve_batch_streamed)
+from repro.core.ovo import build_ovo_tasks
+from repro.data import make_multiclass
+
+OUT_PATH = os.environ.get("BENCH_STAGE2_STREAM_JSON", "BENCH_stage2_stream.json")
+SMOKE = bool(os.environ.get("BENCH_SMOKE"))
+
+# (n, budget, classes); overridable for quick smoke runs
+SIZES = (((600, 96, 3),) if SMOKE
+         else ((2_000, 128, 3), (5_000, 192, 3)))
+TILES = ((128,) if SMOKE else (512, 1_536))
+CONFIG = SolverConfig(tol=1e-2, max_epochs=200 if SMOKE else 400)
+
+
+def _problem(n: int, budget: int, classes: int):
+    x, y = make_multiclass(n, p=8, n_classes=classes, seed=7)
+    _, labels = np.unique(y, return_inverse=True)
+    fac = compute_factor(jnp.asarray(x, jnp.float32),
+                         KernelParams("rbf", gamma=0.2), budget)
+    tasks, _ = build_ovo_tasks(labels, classes, 4.0)
+    return np.asarray(fac.G), tasks
+
+
+def run() -> None:
+    records = []
+    for n, budget, classes in SIZES:
+        G, tasks = _problem(n, budget, classes)
+        rank = G.shape[1]
+
+        def mono():
+            solve_batch(jnp.asarray(G), tasks, CONFIG).w.block_until_ready()
+
+        t = timeit(mono, repeats=1 if SMOKE else 3)
+        res = solve_batch(jnp.asarray(G), tasks, CONFIG)
+        visits = int(np.asarray(res.epochs).sum()) * n
+        emit(f"stage2_mono_n{n}_B{rank}", t * 1e6, f"{visits / t:.0f} visits/s")
+        records.append({"mode": "monolithic", "n": n, "rank": rank,
+                        "n_tasks": tasks.n_tasks, "tile_rows": n,
+                        "seconds": t, "visits_per_s": visits / t,
+                        "bytes_h2d": G.nbytes, "epoch_bytes": None})
+
+        for tile in TILES:
+            if tile >= n:
+                continue
+            cfg = StreamConfig(tile_rows=tile)
+            holder = {}
+
+            def streamed():
+                holder["st"] = solve_batch_streamed(
+                    G, tasks, CONFIG, stream_config=cfg,
+                    return_stats=True)[1]
+
+            # warmup (jit compile) + ONE timed run whose stats we keep — a
+            # full solve is already minutes of dispatch at these sizes
+            t = timeit(streamed, repeats=1)
+            st = holder["st"]
+            # every kernel call sweeps one (tile,) block for one task, so
+            # this matches the monolithic epochs.sum() * n visit count
+            # (modulo tail-block padding)
+            visits = st.kernel_calls * st.tile_rows
+            emit(f"stage2_stream_n{n}_B{rank}_t{tile}", t * 1e6,
+                 f"{visits / t:.0f} visits/s "
+                 f"{st.bytes_h2d / 2**20:.1f}MiB h2d")
+            records.append({"mode": "streamed", "n": n, "rank": rank,
+                            "n_tasks": tasks.n_tasks, "tile_rows": tile,
+                            "seconds": t, "visits_per_s": visits / t,
+                            "bytes_h2d": st.bytes_h2d,
+                            "bytes_d2h": st.bytes_d2h,
+                            "epochs": st.epochs,
+                            "full_passes": st.full_passes,
+                            "epoch_bytes": st.epoch_bytes,
+                            "active_history": st.active_history})
+            # shrinking must turn into bandwidth savings: compare the first
+            # (uncompacted) epoch's H2D bytes with the cheapest later epoch
+            if st.epoch_bytes:
+                first, floor = st.epoch_bytes[0], min(st.epoch_bytes)
+                emit(f"stage2_shrink_bytes_n{n}_t{tile}", 0.0,
+                     f"{first / max(floor, 1):.1f}x epoch-byte reduction")
+
+    payload = {"benchmark": "stage2_streaming",
+               "backend": jax.default_backend(),
+               "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+               "records": records}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {OUT_PATH} ({len(records)} records)", flush=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

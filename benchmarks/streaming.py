@@ -28,11 +28,12 @@ from repro.core.streaming import stream_factor_rows
 from repro.data import make_checker
 
 OUT_PATH = os.environ.get("BENCH_STREAMING_JSON", "BENCH_streaming.json")
+SMOKE = bool(os.environ.get("BENCH_SMOKE"))
 
-# (n, budget); overridable for quick smoke runs
-SIZES = ((2_000, 128), (8_000, 256), (20_000, 256))
-CHUNKS = (1_024, 4_096)
-PREFETCH = (1, 2)
+# (n, budget); BENCH_SMOKE=1 shrinks everything for the fast CI loop
+SIZES = ((2_000, 128),) if SMOKE else ((2_000, 128), (8_000, 256), (20_000, 256))
+CHUNKS = (512,) if SMOKE else (1_024, 4_096)
+PREFETCH = (2,) if SMOKE else (1, 2)
 
 
 def _stage1_inputs(n: int, budget: int, gamma: float = 8.0):

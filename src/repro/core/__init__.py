@@ -4,20 +4,30 @@ from repro.core.nystrom import LowRankFactor, compute_factor, select_landmarks
 from repro.core.dual_solver import (SolverConfig, TaskBatch, SolveResult,
                                     solve_one, solve_batch, duality_gap)
 from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
+from repro.core.solver_stream import (Stage2StreamStats, auto_tile_rows,
+                                      should_stream_stage2,
+                                      solve_batch_streamed)
 from repro.core.svm import LPDSVM
 from repro.core.cv import grid_search, cross_validate, kfold_masks
-from repro.core.distributed import solve_tasks_sharded, stream_factor_over_mesh
+from repro.core.distributed import (solve_tasks_sharded,
+                                    solve_tasks_streamed_mesh,
+                                    stream_factor_over_mesh)
 from repro.core.streaming import (StreamConfig, auto_chunk_rows,
-                                  compute_factor_streamed, should_stream,
-                                  stream_factor_rows)
+                                  compute_factor_streamed,
+                                  compute_factor_streamed_csr, should_stream,
+                                  stream_factor_blocks, stream_factor_rows)
 
 __all__ = [
     "KernelParams", "gram", "kernel_diag",
     "LowRankFactor", "compute_factor", "select_landmarks",
     "SolverConfig", "TaskBatch", "SolveResult", "solve_one", "solve_batch",
     "duality_gap", "build_ovo_tasks", "class_pairs", "ovo_vote",
+    "Stage2StreamStats", "auto_tile_rows", "should_stream_stage2",
+    "solve_batch_streamed",
     "LPDSVM", "grid_search", "cross_validate", "kfold_masks",
-    "solve_tasks_sharded", "stream_factor_over_mesh",
+    "solve_tasks_sharded", "solve_tasks_streamed_mesh",
+    "stream_factor_over_mesh",
     "StreamConfig", "auto_chunk_rows", "compute_factor_streamed",
-    "should_stream", "stream_factor_rows",
+    "compute_factor_streamed_csr", "should_stream", "stream_factor_blocks",
+    "stream_factor_rows",
 ]

@@ -26,7 +26,20 @@ from repro.core.dual_solver import SolverConfig, TaskBatch, solve_batch
 from repro.core.kernel_fn import KernelParams, gram
 from repro.core.nystrom import LowRankFactor, compute_factor, wait_for_factor
 from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
+from repro.core.solver_stream import route_stage2, solve_batch_streamed
 from repro.core.streaming import StreamConfig
+
+
+def _solve_routed(factor: LowRankFactor, tasks: TaskBatch,
+                  config: SolverConfig, solve_fn: Callable,
+                  stream, stream_config: Optional[StreamConfig]):
+    """Stage-2 dispatch (see `solver_stream.route_stage2`, shared with
+    `LPDSVM._solve_stage2`)."""
+    if route_stage2(factor, tasks, stream, stream_config, solve_fn,
+                    solve_batch):
+        return solve_batch_streamed(factor.G, tasks, config,
+                                    stream_config=stream_config)
+    return solve_fn(factor.G, tasks, config)
 
 
 def kfold_masks(n: int, k: int, seed: int = 0) -> List[np.ndarray]:
@@ -160,8 +173,9 @@ def grid_search(
             t0 = time.perf_counter()
             tasks, _ = build_cv_tasks(labels, n_classes, C, val_masks,
                                       warm=warm if warm_start else None)
-            res = solve_fn(factor.G, tasks, config)
-            res.w.block_until_ready()
+            res = _solve_routed(factor, tasks, config, solve_fn,
+                                stream, stream_config)
+            wait_for_factor(res.w)
             dt = time.perf_counter() - t0
             t_stage2 += dt
             cell_sec[gi, ci] = dt
@@ -199,6 +213,6 @@ def cross_validate(
                                 stream=stream, stream_config=stream_config)
     val_masks = kfold_masks(x.shape[0], folds, seed)
     tasks, _ = build_cv_tasks(labels, n_classes, float(C), val_masks)
-    res = solve_fn(factor.G, tasks, config)
+    res = _solve_routed(factor, tasks, config, solve_fn, stream, stream_config)
     err = _cv_error(factor, labels, n_classes, res.w, val_masks)
     return err, factor

@@ -86,6 +86,45 @@ def solve_tasks_sharded(
     return SolveResult(*(r[:T] for r in res))
 
 
+def solve_tasks_streamed_mesh(
+    mesh: Mesh,
+    G,
+    tasks: TaskBatch,
+    config: SolverConfig,
+    *,
+    stream_config=None,
+) -> SolveResult:
+    """Out-of-core counterpart of `solve_tasks_sharded`: G stays a host
+    numpy buffer and each local device solves a contiguous slice of the task
+    axis by streaming G row-blocks (core/solver_stream.py) with its own
+    device-resident w state.
+
+    The host drives the devices' block streams in turn; each device's H2D /
+    compute overlap comes from the solver's own prefetch queue.  Like
+    `stream_factor_over_mesh` this is per-host — a multi-host mesh runs one
+    call per process on its local task share (ROADMAP item).
+    """
+    from repro.core.solver_stream import solve_batch_streamed
+
+    devices = list(mesh.local_devices)
+    T = tasks.n_tasks
+    if len(devices) <= 1:
+        return solve_batch_streamed(G, tasks, config,
+                                    stream_config=stream_config,
+                                    device=devices[0] if devices else None)
+    bounds = np.linspace(0, T, len(devices) + 1).astype(int)
+    parts = []
+    for d, lo, hi in zip(devices, bounds[:-1], bounds[1:]):
+        if lo == hi:
+            continue
+        sub = TaskBatch(tasks.idx[lo:hi], tasks.y[lo:hi],
+                        tasks.c[lo:hi], tasks.alpha0[lo:hi])
+        parts.append(solve_batch_streamed(G, sub, config,
+                                          stream_config=stream_config,
+                                          device=d))
+    return SolveResult(*(np.concatenate(f) for f in zip(*parts)))
+
+
 # ---------------------------------------------------------------------------
 # Stage 1 with explicit shardings (used by launch/dryrun.py and train_svm.py)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,457 @@
+"""Out-of-core stage 2: stream G row-blocks through the SMO epoch.
+
+The paper keeps alpha on the GPU and the full factor G in host RAM ("more
+RAM!"), so the trainable n is bounded by the 512 GB-class host, not device
+HBM.  `dual_solver.solve_batch` re-materialises all of G on device when it
+traces, silently re-capping n at HBM; this module closes that gap:
+
+    host RAM                              device HBM
+    ───────────────────────────────       ────────────────────────────────
+    G        (n, B)   read-only           w        (T, B)   resident, chained
+    alpha    (T, n)   scattered back      per block: G[s:e], y/c/q/alpha/
+    unchanged(T, n)   per block                      unchanged slices
+
+Per epoch, (tile, B) row-blocks of G are `device_put` with the same
+prefetch-deep async double buffering as `core/streaming.py` (enqueue block
+k+1's H2D + kernel launches before draining block k's alpha back to host),
+and every streamed block updates EVERY task before eviction, so the H2D
+traffic is amortised over the whole OVO/CV task batch.  The per-task weight
+vector w stays device-resident across blocks and epochs — the cross-block
+analogue of the SMO kernel's VMEM scratchpad (kernels/smo.py).
+
+Shrinking follows `core/compact.py`'s bucket-compaction design, but here it
+cuts H2D *bytes*, not just FLOPs: after every full pass the union of active
+rows over all unconverged tasks is gathered host-side, and the cheap epochs
+stream only those rows.  Tasks are expressed in GLOBAL row coordinates
+(c = 0 rows are inert no-ops), which makes the streamed trajectory exactly
+the monolithic `solve_one` trajectory — blocks only re-chunk the same
+sequential coordinate sweep — so parity with `solve_batch` holds to float
+accumulation order, including shrinking counters and warm starts.
+
+Requirements on the TaskBatch: each task's real (c > 0) rows must be unique;
+sorted idx (what `build_ovo_tasks`/`build_cv_tasks` produce) additionally
+gives trajectory-exact parity with the monolithic path.
+
+Scaling note: global row coordinates cost O(T * n) HOST memory for the task
+state (y/c/alpha/unchanged) and stream every live task over every full-pass
+block.  For OVO that is a ~k/2 overhead versus task-local padding
+(n_pad ~ 2n/k) — negligible against the (n, B) G while 7*T << B, i.e. for
+the tens-of-classes regime this repo drives.  Hundreds of OVO classes want
+task-LOCAL streamed coordinates (per-block searchsorted windows into each
+task's sorted idx); see the ROADMAP open item.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import math
+import time
+from functools import partial
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dual_solver import (DELTA_EPS, Q_FLOOR, SolveResult,
+                                    SolverConfig, TaskBatch)
+from repro.core.streaming import BYTES_F32, StreamConfig
+
+_H2D_GUARD = getattr(jax, "transfer_guard_host_to_device", None)
+
+
+# ---------------------------------------------------------------------------
+# stage-2 memory budget model (documented in docs/architecture.md)
+# ---------------------------------------------------------------------------
+
+def stage2_resident_bytes(rank: int, n_tasks: int) -> int:
+    """Device-resident stage-2 state: one (B,) weight vector per task."""
+    return n_tasks * rank * BYTES_F32
+
+
+def stage2_block_bytes(tile: int, rank: int, n_tasks: int) -> int:
+    """Working set of ONE in-flight block: the G tile plus, per task, the
+    five input vectors (y, c, q, alpha, unchanged) and two outputs."""
+    return tile * (rank + 7 * n_tasks) * BYTES_F32
+
+
+def stage2_monolithic_bytes(n: int, rank: int, n_tasks: int, n_pad: int) -> int:
+    """Device working set of `solve_batch`: full G + per-task vectors."""
+    return (n * rank + n_tasks * (7 * n_pad + 2 * rank)) * BYTES_F32
+
+
+def should_stream_stage2(n: int, rank: int, n_tasks: int, n_pad: int,
+                         cfg: StreamConfig) -> bool:
+    """True when the monolithic stage-2 working set blows the device budget."""
+    return stage2_monolithic_bytes(n, rank, n_tasks, n_pad) > cfg.device_budget_bytes
+
+
+def route_stage2(factor, tasks: TaskBatch, stream,
+                 stream_config: Optional[StreamConfig],
+                 solve_fn, default_solve_fn) -> bool:
+    """The ONE stage-2 routing predicate (`LPDSVM.fit`, `core/cv.py`, CLI):
+    stream G row-blocks when G is already host-resident (`factor.streamed`),
+    streaming is forced, or the monolithic working set exceeds the device
+    budget.  A custom ``solve_fn`` (e.g. the sharded task farm) is always
+    respected, and ``stream=False`` pins the monolithic path.
+    """
+    if solve_fn is not default_solve_fn or stream is False:
+        return False
+    if stream or getattr(factor, "streamed", False):
+        return True
+    if stream_config is None:
+        return False
+    n, rank = factor.G.shape
+    return should_stream_stage2(n, rank, tasks.n_tasks, tasks.idx.shape[1],
+                                stream_config)
+
+
+def auto_tile_rows(n: int, rank: int, n_tasks: int, cfg: StreamConfig) -> int:
+    """Largest row tile whose `prefetch` in-flight blocks fit the budget.
+
+    Solves  prefetch * stage2_block_bytes(t) + resident <= budget  for t,
+    floored at `min_chunk_rows` (tiny budgets should not degenerate into
+    per-row dispatch) and rounded up to a multiple of 8.
+    """
+    if cfg.tile_rows is not None:
+        return max(8, -(-min(cfg.tile_rows, n) // 8) * 8)
+    free = cfg.device_budget_bytes - stage2_resident_bytes(rank, n_tasks)
+    per_row = cfg.prefetch * (rank + 7 * n_tasks) * BYTES_F32
+    rows = (free // per_row) // 8 * 8 if free > 0 else 0   # round down: budget
+    return int(min(-(-n // 8) * 8, max(cfg.min_chunk_rows, rows, 8)))
+
+
+# ---------------------------------------------------------------------------
+# block-epoch kernels
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("full_pass", "shrink_k"))
+def smo_epoch_oracle(G, y, c, q, alpha, unchanged, w, *, full_pass: bool,
+                     shrink_k: int):
+    """One sequential coordinate-ascent sweep over a (tile, B) block.
+
+    Flat 1-D vectors in/out, same contract as `kernels.ops.smo_epoch`; the
+    body mirrors `dual_solver.epoch_ref` op-for-op so that chaining blocks
+    reproduces the monolithic trajectory exactly.
+    """
+    n = G.shape[0]
+
+    def body(i, state):
+        alpha, w, unchanged, viol = state
+        row = G[i]
+        a_i, c_i, y_i, q_i = alpha[i], c[i], y[i], q[i]
+        active = jnp.logical_and(
+            c_i > 0.0, jnp.logical_or(full_pass, unchanged[i] < shrink_k))
+        g = 1.0 - y_i * jnp.dot(w, row)
+        at_lo = a_i <= 0.0
+        at_hi = a_i >= c_i
+        pg = jnp.where(at_lo, jnp.maximum(g, 0.0),
+                       jnp.where(at_hi, jnp.minimum(g, 0.0), g))
+        pg = jnp.where(c_i > 0.0, pg, 0.0)
+        a_new = jnp.clip(a_i + g / jnp.maximum(q_i, Q_FLOOR), 0.0, c_i)
+        a_new = jnp.where(active, a_new, a_i)
+        delta = a_new - a_i
+        w = w + (delta * y_i) * row
+        alpha = alpha.at[i].set(a_new)
+        changed = jnp.abs(delta) > DELTA_EPS
+        u_new = jnp.where(changed, 0, unchanged[i] + 1)
+        u_new = jnp.where(active, u_new, unchanged[i])
+        unchanged = unchanged.at[i].set(u_new)
+        viol = jnp.where(active, jnp.maximum(viol, jnp.abs(pg)), viol)
+        return alpha, w, unchanged, viol
+
+    alpha, w, unchanged, viol = jax.lax.fori_loop(
+        0, n, body, (alpha, w, unchanged, jnp.float32(0.0)))
+    return alpha, unchanged, w, viol
+
+
+def default_epoch_fn() -> Callable:
+    """Pallas SMO kernel on TPU; the jnp oracle elsewhere (interpret-mode
+    Pallas is pure overhead on CPU, and the oracle matches `epoch_ref`)."""
+    if jax.default_backend() == "tpu":
+        from repro.kernels.ops import smo_epoch
+        return smo_epoch
+    return smo_epoch_oracle
+
+
+@jax.jit
+def _row_sq(G):
+    """Per-row squared norms — same op as `solve_one`'s q computation."""
+    return jnp.sum(G ** 2, axis=-1)
+
+
+@jax.jit
+def _accum_w(w, G, alpha, y):
+    """Warm-start w accumulation: w += (alpha * y) @ G_block."""
+    return w + (alpha * y) @ G
+
+
+def _put(a, device=None):
+    """Deliberate H2D transfer of one bounded block.
+
+    Kept as the single host->device choke point: tests run the whole solve
+    under `jax.transfer_guard_host_to_device("disallow")` to prove the full
+    G is never device-materialised; only these explicit block puts are
+    allowed through.
+    """
+    cm = (_H2D_GUARD("allow") if _H2D_GUARD is not None
+          else contextlib.nullcontext())
+    with cm:
+        return jax.device_put(a) if device is None else jax.device_put(a, device)
+
+
+# ---------------------------------------------------------------------------
+# the streamed batch solver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Stage2StreamStats:
+    """Traffic + convergence accounting of one streamed stage-2 solve."""
+
+    tile_rows: int = 0
+    epochs: int = 0
+    full_passes: int = 0
+    rows_streamed: int = 0            # sum of block rows over all epochs/passes
+    blocks_streamed: int = 0
+    kernel_calls: int = 0
+    bytes_h2d: int = 0
+    bytes_d2h: int = 0
+    epoch_bytes: List[int] = dataclasses.field(default_factory=list)
+    active_history: List[int] = dataclasses.field(default_factory=list)
+    seconds: float = 0.0
+
+
+class _BlockPipeline:
+    """The prefetch-deep in-flight queue (async double buffer, cf.
+    `streaming.stream_factor_rows`): results are only fetched to host when
+    the queue is full or the pass ends, so H2D, compute, and D2H overlap."""
+
+    def __init__(self, prefetch: int, a_g, u_g, q_host, stats):
+        self.inflight = collections.deque()
+        self.prefetch = max(1, prefetch)
+        self.a_g, self.u_g, self.q_host = a_g, u_g, q_host
+        self.stats = stats
+
+    def push(self, sel, cnt, items, q_ref):
+        self.inflight.append((sel, cnt, items, q_ref))
+        if len(self.inflight) >= self.prefetch:
+            self._drain_one()
+
+    def flush(self):
+        while self.inflight:
+            self._drain_one()
+
+    def _drain_one(self):
+        sel, cnt, items, q_ref = self.inflight.popleft()
+        if q_ref is not None:
+            self.q_host[sel] = np.asarray(q_ref)[:cnt]
+            self.stats.bytes_d2h += cnt * BYTES_F32
+        for t, a_ref, u_ref in items:
+            self.a_g[t][sel] = np.asarray(a_ref)[:cnt]
+            self.u_g[t][sel] = np.asarray(u_ref)[:cnt]
+            self.stats.bytes_d2h += 2 * cnt * BYTES_F32
+
+
+def solve_batch_streamed(
+    G,
+    tasks: TaskBatch,
+    config: SolverConfig = SolverConfig(),
+    *,
+    stream_config: Optional[StreamConfig] = None,
+    epoch_fn: Optional[Callable] = None,
+    device=None,
+    return_stats: bool = False,
+):
+    """Drop-in `solve_batch` over a host-resident G (numpy buffer).
+
+    G row-blocks of `tile` rows stream through `epoch_fn` (the SMO epoch
+    kernel contract) with per-task w chained on device; alpha/unchanged live
+    on host and are scattered back per block.  Returns a `SolveResult` whose
+    fields are host numpy arrays (same shapes/layout as `solve_batch`), plus
+    a `Stage2StreamStats` when ``return_stats=True``.
+    """
+    t_start = time.perf_counter()
+    cfg = stream_config or StreamConfig()
+    if epoch_fn is None:
+        epoch_fn = default_epoch_fn()
+
+    G = np.asarray(G, np.float32)
+    n, rank = G.shape
+    idx = np.asarray(tasks.idx)
+    y_loc = np.asarray(tasks.y, np.float32)
+    c_loc = np.asarray(tasks.c, np.float32)
+    a0_loc = np.asarray(tasks.alpha0, np.float32)
+    T, n_pad = idx.shape
+
+    tile = auto_tile_rows(n, rank, T, cfg)
+    stats = Stage2StreamStats(tile_rows=tile)
+
+    # Scatter task-local vectors into global row coordinates: rows outside a
+    # task carry c = 0 and are inert, exactly like the monolithic padding.
+    y_g = np.ones((T, n), np.float32)
+    c_g = np.zeros((T, n), np.float32)
+    a_g = np.zeros((T, n), np.float32)
+    u_g = np.zeros((T, n), np.int32)
+    real_loc = c_loc > 0.0
+    for t in range(T):
+        r = idx[t][real_loc[t]]
+        y_g[t, r] = y_loc[t][real_loc[t]]
+        c_g[t, r] = c_loc[t][real_loc[t]]
+        a_g[t, r] = np.clip(a0_loc[t][real_loc[t]], 0.0, c_loc[t][real_loc[t]])
+
+    q_host = np.zeros((n,), np.float32)
+    have_q = False
+    w = [_put(np.zeros((rank,), np.float32), device) for _ in range(T)]
+    pipe = _BlockPipeline(cfg.prefetch, a_g, u_g, q_host, stats)
+
+    period = config.full_pass_period if config.shrink else 1
+    shrink_k = config.shrink_k if config.shrink else 1 << 30
+
+    def _padded(vec, fill, dtype):
+        if vec.shape[0] == tile:
+            return np.ascontiguousarray(vec, dtype)
+        buf = np.full((tile,), fill, dtype)
+        buf[: vec.shape[0]] = vec
+        return buf
+
+    def _pass(rows, live, *, full: bool, compute_q: bool,
+              accumulate_w_only: bool = False, blk_active=None,
+              rows_G=None, rows_q=None):
+        """Stream one epoch (or the warm-start init pass) over `rows`
+        (None = all of G); returns per-task violation refs on full passes.
+        ``rows_G``/``rows_q`` are the once-per-compaction gathers of
+        G[rows]/q[rows], so cheap-epoch blocks slice views instead of
+        re-fancy-indexing the full host G every epoch."""
+        m = n if rows is None else len(rows)
+        n_blocks = math.ceil(m / tile)
+        viol_refs = {t: [] for t in live}
+        h2d_before = stats.bytes_h2d
+        for b in range(n_blocks):
+            s, e = b * tile, min((b + 1) * tile, m)
+            cnt = e - s
+            if rows is None:
+                sel = slice(s, e)
+                gb_host = G[s:e]
+            else:
+                sel = rows[s:e]
+                gb_host = rows_G[s:e] if rows_G is not None else G[sel]
+            if cnt < tile:
+                pad = np.zeros((tile, rank), np.float32)
+                pad[:cnt] = gb_host
+                gb_host = pad
+            gb = _put(gb_host, device)
+            stats.bytes_h2d += gb.nbytes
+            if compute_q:
+                qb = _row_sq(gb)
+                q_ref = qb
+            else:
+                qsrc = (rows_q[s:e] if rows_q is not None and rows is not None
+                        else q_host[sel])
+                qb = _put(_padded(qsrc, 0.0, np.float32), device)
+                q_ref = None
+                stats.bytes_h2d += qb.nbytes
+            items = []
+            for t in live:
+                if blk_active is not None and not blk_active[t][b]:
+                    continue
+                ab = _put(_padded(a_g[t][sel], 0.0, np.float32), device)
+                yb = _put(_padded(y_g[t][sel], 1.0, np.float32), device)
+                stats.bytes_h2d += ab.nbytes + yb.nbytes
+                if accumulate_w_only:
+                    w[t] = _accum_w(w[t], gb, ab, yb)
+                    stats.kernel_calls += 1
+                    continue
+                cb = _put(_padded(c_g[t][sel], 0.0, np.float32), device)
+                ub = _put(_padded(u_g[t][sel], 0, np.int32), device)
+                stats.bytes_h2d += cb.nbytes + ub.nbytes
+                a2, u2, w2, viol = epoch_fn(
+                    gb, yb, cb, qb, ab, ub, w[t],
+                    full_pass=full, shrink_k=shrink_k)
+                w[t] = w2
+                items.append((t, a2, u2))
+                stats.kernel_calls += 1
+                if full:
+                    viol_refs[t].append(viol)
+            pipe.push(sel, cnt, items, q_ref)
+            stats.blocks_streamed += 1
+            stats.rows_streamed += cnt
+        pipe.flush()
+        stats.epoch_bytes.append(stats.bytes_h2d - h2d_before)
+        return viol_refs
+
+    all_tasks = list(range(T))
+    # Warm starts need w0 = (alpha0 * y) @ G before the first coordinate
+    # update, which costs one extra accumulation stream (it also fills q).
+    if a_g.any():
+        warm_live = [t for t in all_tasks if a_g[t].any()]
+        _pass(None, warm_live, full=False, compute_q=True,
+              accumulate_w_only=True)
+        stats.epoch_bytes.pop()      # init pass is not an epoch
+        have_q = True
+
+    done = np.zeros((T,), bool)
+    violation = np.full((T,), np.inf, np.float32)
+    epochs_used = np.full((T,), config.max_epochs, np.int32)
+    act: Optional[np.ndarray] = None          # compacted active-row union
+    act_G = act_q = None                      # host gathers of G[act], q[act]
+    blk_active = None                         # per-task block occupancy
+    epochs_run = 0
+
+    for epoch in range(config.max_epochs):
+        live = [t for t in all_tasks if not done[t]]
+        if not live:
+            break
+        full = (epoch % period == 0) or not config.shrink
+        epochs_run = epoch + 1
+        if full:
+            viol_refs = _pass(None, live, full=True, compute_q=not have_q)
+            have_q = True
+            stats.full_passes += 1
+            for t in live:
+                v = max(float(np.asarray(r)) for r in viol_refs[t])
+                violation[t] = v
+                if v < config.tol:
+                    done[t] = True
+                    epochs_used[t] = epoch + 1
+            # Re-compact: cheap epochs stream only rows active for at least
+            # one unconverged task — shrinking cuts H2D bytes, not just FLOPs.
+            act, act_G, act_q, blk_active = None, None, None, None
+            live2 = [t for t in all_tasks if not done[t]]
+            if config.shrink and live2:
+                masks = (c_g[live2] > 0.0) & (u_g[live2] < shrink_k)
+                union = np.where(masks.any(axis=0))[0]
+                stats.active_history.append(int(len(union)))
+                if len(union) < n:
+                    act = union
+                    act_G, act_q = G[act], q_host[act]
+                    n_blocks = math.ceil(max(len(act), 1) / tile)
+                    # Block b of a cheap epoch covers GLOBAL rows
+                    # act[b*tile:(b+1)*tile]; a task skips it only when none
+                    # of those rows are active for it.
+                    blk_active = {
+                        t: np.array([m[act[b * tile:(b + 1) * tile]].any()
+                                     for b in range(n_blocks)])
+                        for t, m in zip(live2, masks)
+                    }
+        else:
+            if act is not None and len(act) == 0:
+                continue    # everything shrunk: the epoch is a no-op
+            _pass(act, live, full=False, compute_q=False,
+                  blk_active=blk_active, rows_G=act_G, rows_q=act_q)
+
+    stats.epochs = epochs_run
+
+    # ------------------------------------------------------------- results
+    W = np.stack([np.asarray(wt) for wt in w]) if T else np.zeros((0, rank))
+    stats.bytes_d2h += W.nbytes
+    alpha = np.zeros_like(a0_loc)
+    for t in range(T):
+        alpha[t][real_loc[t]] = a_g[t][idx[t][real_loc[t]]]
+    dual = a_g.sum(axis=1) - 0.5 * (W * W).sum(axis=1)
+    n_sv = (alpha > 0.0).sum(axis=1).astype(np.int32)
+    stats.seconds = time.perf_counter() - t_start
+    res = SolveResult(alpha=alpha, w=W.astype(np.float32),
+                      epochs=epochs_used, violation=violation,
+                      dual_obj=dual.astype(np.float32), n_sv=n_sv)
+    return (res, stats) if return_stats else res

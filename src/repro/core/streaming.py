@@ -52,12 +52,15 @@ class StreamConfig:
     chunk_rows: Optional[int] = None     # None -> derived from the budget
     prefetch: int = 2                    # chunks in flight (double buffering)
     min_chunk_rows: int = 256
+    tile_rows: Optional[int] = None      # stage-2 G block rows (None -> derived)
 
     def __post_init__(self):
         if self.prefetch < 1:
             raise ValueError("prefetch must be >= 1")
         if self.chunk_rows is not None and self.chunk_rows < 1:
             raise ValueError("chunk_rows must be positive")
+        if self.tile_rows is not None and self.tile_rows < 1:
+            raise ValueError("tile_rows must be positive")
 
 
 def resident_bytes(p: int, budget: int) -> int:
@@ -102,29 +105,30 @@ def _chunk_features(xb, landmarks, projector, params: KernelParams, gram_fn):
     return gram_fn(xb, landmarks, params) @ projector
 
 
-def stream_factor_rows(
-    x,
+def stream_factor_blocks(
+    blocks,
+    n: int,
     landmarks: jnp.ndarray,
     projector: jnp.ndarray,
     params: KernelParams,
     *,
-    chunk_rows: int,
     prefetch: int = 2,
     gram_fn: Callable = gram,
     out: Optional[np.ndarray] = None,
     devices: Optional[Sequence] = None,
 ) -> np.ndarray:
-    """Fill a host-resident G = K(x, landmarks) @ projector, chunk by chunk.
+    """Fill a host-resident G from an *iterator* of dense row blocks.
 
-    ``x`` stays on host (numpy); each chunk is ``jax.device_put`` and the
+    The generic core of `stream_factor_rows`: ``blocks`` yields (rows, p)
+    float32 arrays totalling ``n`` rows (e.g. `CSRData.iter_dense_blocks` or
+    `read_libsvm_blocks`), so stage 1 never materialises the full dense
+    (n, p) host matrix.  Each block is ``jax.device_put`` and the
     gram+project launch dispatched asynchronously, with at most ``prefetch``
-    chunks in flight per device before the host blocks on the oldest one and
-    copies it into the preallocated ``out`` buffer.  Passing ``devices``
-    round-robins *disjoint* chunk streams across them (landmarks/projector
-    replicated once per device up front).
+    blocks in flight per device before the host blocks on the oldest one and
+    copies it into ``out``.  Passing ``devices`` round-robins *disjoint*
+    block streams across them (landmarks/projector replicated once per
+    device up front).
     """
-    x = np.asarray(x, np.float32)
-    n = x.shape[0]
     rank = projector.shape[1]
     if out is None:
         out = np.empty((n, rank), np.float32)
@@ -150,20 +154,50 @@ def stream_factor_rows(
         out[s:e] = np.asarray(gb)   # blocks on this chunk only
 
     max_inflight = prefetch * len(devices)
-    starts = range(0, n, chunk_rows)
-    for i, s in enumerate(starts):
-        e = min(s + chunk_rows, n)
+    s = 0
+    for i, xb in enumerate(blocks):
+        xb = np.asarray(xb, np.float32)
+        e = s + xb.shape[0]
+        if e > n:
+            raise ValueError(f"block iterator produced more than {n} rows")
         d = devices[i % len(devices)]
         lm, pr = resident[i % len(devices)]
-        xb = x[s:e]
         xb = jnp.asarray(xb) if d is None else jax.device_put(xb, d)
         gb = _chunk_features(xb, lm, pr, params, gram_fn)
         inflight.append((s, e, gb))
         if len(inflight) >= max_inflight:
             drain_one()
+        s = e
     while inflight:
         drain_one()
+    if s != n:
+        raise ValueError(f"block iterator produced {s} rows, expected {n}")
     return out
+
+
+def stream_factor_rows(
+    x,
+    landmarks: jnp.ndarray,
+    projector: jnp.ndarray,
+    params: KernelParams,
+    *,
+    chunk_rows: int,
+    prefetch: int = 2,
+    gram_fn: Callable = gram,
+    out: Optional[np.ndarray] = None,
+    devices: Optional[Sequence] = None,
+) -> np.ndarray:
+    """Fill a host-resident G = K(x, landmarks) @ projector, chunk by chunk.
+
+    ``x`` stays on host (numpy); row chunks of ``chunk_rows`` are sliced off
+    it and fed through `stream_factor_blocks`' in-flight pipeline.
+    """
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    blocks = (x[s:min(s + chunk_rows, n)] for s in range(0, n, chunk_rows))
+    return stream_factor_blocks(
+        blocks, n, landmarks, projector, params, prefetch=prefetch,
+        gram_fn=gram_fn, out=out, devices=devices)
 
 
 def compute_factor_streamed(
@@ -183,12 +217,8 @@ def compute_factor_streamed(
     The landmark eigendecomposition is unchanged (B x B fits any device); only
     the (n, B) gram + projection — the part that scales with n — streams.
     """
-    from repro.core import nystrom  # deferred: nystrom routes back into us
-
     if key is None:
         key = jax.random.PRNGKey(0)
-    if eig_rtol is None:
-        eig_rtol = nystrom.DEFAULT_EIG_RTOL
     x = np.asarray(x, np.float32)
     n, p = x.shape
 
@@ -197,14 +227,73 @@ def compute_factor_streamed(
     else:
         landmarks = jnp.asarray(_select_landmarks_host(x, budget, key),
                                 jnp.float32)
+
+    def make_blocks(chunk):
+        return (x[s:min(s + chunk, n)] for s in range(0, n, chunk))
+
+    return _streamed_factor_from_landmarks(
+        landmarks, make_blocks, n, p, params, eig_rtol=eig_rtol,
+        config=config, gram_fn=gram_fn, devices=devices)
+
+
+def compute_factor_streamed_csr(
+    data,
+    params: KernelParams,
+    budget: int,
+    *,
+    key: Optional[jax.Array] = None,
+    eig_rtol: Optional[float] = None,
+    config: StreamConfig = StreamConfig(),
+    gram_fn: Callable = gram,
+    devices: Optional[Sequence] = None,
+):
+    """Out-of-core stage 1 straight from a `CSRData` (LIBSVM) data set.
+
+    The sparse triple stays the only full-data host object: landmarks are
+    gathered row-wise from the CSR storage, and the (n, p) dense matrix is
+    only ever materialised one `chunk_rows` block at a time on its way to the
+    device (`CSRData.iter_dense_blocks` -> `stream_factor_blocks`).  Uses the
+    same landmark permutation as `compute_factor_streamed`, so the factor is
+    identical to densify-then-stream for a given key.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n, p = data.n, data.n_features
+    b = min(budget, n)
+    if b >= n:
+        lm_rows = np.arange(n)
+    else:
+        lm_rows = np.asarray(jax.random.choice(key, n, shape=(b,),
+                                               replace=False))
+    landmarks = jnp.asarray(data.densify_rows(lm_rows), jnp.float32)
+
+    def make_blocks(chunk):
+        return (blk for blk, _ in data.iter_dense_blocks(chunk))
+
+    return _streamed_factor_from_landmarks(
+        landmarks, make_blocks, n, p, params, eig_rtol=eig_rtol,
+        config=config, gram_fn=gram_fn, devices=devices)
+
+
+def _streamed_factor_from_landmarks(
+    landmarks, make_blocks, n: int, p: int, params: KernelParams, *,
+    eig_rtol: Optional[float], config: StreamConfig, gram_fn: Callable,
+    devices: Optional[Sequence],
+):
+    """Shared tail of the streamed stage-1 constructors: eigendecompose the
+    landmark kernel, then stream ``make_blocks(chunk_rows)`` into G."""
+    from repro.core import nystrom  # deferred: nystrom routes back into us
+
+    if eig_rtol is None:
+        eig_rtol = nystrom.DEFAULT_EIG_RTOL
     k_mm = gram_fn(landmarks, landmarks, params)
     projector, evals, rank = nystrom._eig_projector(k_mm, params, eig_rtol)
     rank = int(rank)
     projector = projector[:, :rank]
 
     chunk = auto_chunk_rows(n, p, landmarks.shape[0], config)
-    G = stream_factor_rows(
-        x, landmarks, projector, params, chunk_rows=chunk,
+    G = stream_factor_blocks(
+        make_blocks(chunk), n, landmarks, projector, params,
         prefetch=config.prefetch, gram_fn=gram_fn, devices=devices)
 
     return nystrom.LowRankFactor(

@@ -22,6 +22,8 @@ from repro.core.dual_solver import SolveResult, SolverConfig, TaskBatch, solve_b
 from repro.core.kernel_fn import KernelParams, gram
 from repro.core.nystrom import LowRankFactor, compute_factor, wait_for_factor
 from repro.core.ovo import build_ovo_tasks, ovo_decision_values, ovo_vote
+from repro.core.solver_stream import (Stage2StreamStats, route_stage2,
+                                      solve_batch_streamed)
 from repro.core.streaming import StreamConfig
 
 
@@ -36,6 +38,8 @@ class FitStats:
     violations: Optional[np.ndarray] = None
     effective_rank: int = 0
     stage1_streamed: bool = False   # True -> G came from the out-of-core path
+    stage2_streamed: bool = False   # True -> solver streamed G row-blocks
+    stage2_stats: Optional[Stage2StreamStats] = None
 
 
 class LPDSVM:
@@ -60,9 +64,10 @@ class LPDSVM:
         self.seed = seed
         self.gram_fn = gram_fn
         self.solve_fn = solve_fn
-        # Out-of-core stage 1: `stream` forces it, `stream_config`'s device
-        # budget auto-routes it (see core/streaming.py); both None -> always
-        # the monolithic device-resident path.
+        # Out-of-core training: `stream` forces it, `stream_config`'s device
+        # budget auto-routes it (see core/streaming.py + core/solver_stream.py
+        # — both stages stream, so fitting scales past HBM end to end); both
+        # None -> always the monolithic device-resident paths.
         self.stream = stream
         self.stream_config = stream_config
         # fitted state
@@ -104,6 +109,8 @@ class LPDSVM:
             raise ValueError("need at least two classes")
         if factor is not None:
             self.factor = factor
+            self.stats.effective_rank = factor.effective_rank
+            self.stats.stage1_streamed = factor.streamed
         self.prepare(x)
 
         warm = None
@@ -112,8 +119,8 @@ class LPDSVM:
         tasks, self.pairs_ = build_ovo_tasks(labels, n_classes, self.C, alpha0=warm)
         self.tasks_ = tasks
         t0 = time.perf_counter()
-        res: SolveResult = self.solve_fn(self.factor.G, tasks, self.config)
-        res.w.block_until_ready()
+        res: SolveResult = self._solve_stage2(tasks)
+        wait_for_factor(res.w)
         self.stats.stage2_seconds = time.perf_counter() - t0
         self.stats.n_tasks = tasks.n_tasks
         self.stats.epochs = np.asarray(res.epochs)
@@ -121,6 +128,23 @@ class LPDSVM:
         self.W_ = res.w
         self.alpha_ = res.alpha
         return self
+
+    def _solve_stage2(self, tasks: TaskBatch) -> SolveResult:
+        """Stage-2 dispatch (see `solver_stream.route_stage2`): the streamed
+        row-block solver when G must stay host-resident, else the jit'd
+        `solve_batch`."""
+        G = self.factor.G
+        self.stats.stage2_streamed = False      # refits must not report the
+        self.stats.stage2_stats = None          # previous fit's stream stats
+        if not route_stage2(self.factor, tasks, self.stream,
+                            self.stream_config, self.solve_fn, solve_batch):
+            return self.solve_fn(G, tasks, self.config)
+        res, stats = solve_batch_streamed(
+            G, tasks, self.config, stream_config=self.stream_config,
+            return_stats=True)
+        self.stats.stage2_streamed = True
+        self.stats.stage2_stats = stats
+        return res
 
     # --------------------------------------------------------------- prediction
     def decision_function(self, x: np.ndarray) -> np.ndarray:
@@ -131,11 +155,28 @@ class LPDSVM:
 
     def predict(self, x: np.ndarray) -> np.ndarray:
         d = self.decision_function(x)
+        return self._vote(d)
+
+    def _vote(self, d: np.ndarray) -> np.ndarray:
         if len(self.classes_) == 2:
             pred = np.where(d[:, 0] > 0, 0, 1)
         else:
             pred = ovo_vote(d, self.pairs_, len(self.classes_))
         return self.classes_[pred]
+
+    def predict_from_factor(self, rows: Optional[np.ndarray] = None) -> np.ndarray:
+        """Predict TRAINING rows straight from the fitted factor's G — no
+        kernel evaluations and no dense x required (the `--libsvm` CLI path
+        scores this way so the dense (n, p) matrix is never materialised)."""
+        if self.W_ is None:
+            raise RuntimeError("fit first")
+        G = self.factor.G
+        if G.shape[0] == 0:
+            raise RuntimeError(
+                "G is not persisted in checkpoints (it is recomputable from "
+                "the landmarks); refit or use predict(x) on a loaded model")
+        g = G if rows is None else G[np.asarray(rows)]
+        return self._vote(np.asarray(g @ np.asarray(self.W_).T))
 
     def score(self, x: np.ndarray, y: np.ndarray) -> float:
         return float(np.mean(self.predict(x) == np.asarray(y)))
@@ -144,12 +185,13 @@ class LPDSVM:
         return 1.0 - self.score(x, y)
 
     # -------------------------------------------------------------- persistence
-    def save(self, directory: str) -> str:
+    def save(self, directory: str, step: int = 0) -> str:
         """Persist the fitted model (landmarks + projector + per-pair weights).
 
         Only stage-1 artifacts and the solution are stored — G itself is a
         training-time object and is NOT persisted (it is n x B; the paper's
         point is that it can always be recomputed from the landmarks).
+        ``step`` versions successive saves; `load` picks the latest.
         """
         if self.W_ is None:
             raise RuntimeError("fit first")
@@ -169,15 +211,20 @@ class LPDSVM:
                                   .index(self.kernel.kind)),
             },
         }
-        return save_checkpoint(directory, 0, tree)
+        return save_checkpoint(directory, step, tree)
 
     @classmethod
-    def load(cls, directory: str) -> "LPDSVM":
-        from repro.checkpoint import load_checkpoint
+    def load(cls, directory: str, step: Optional[int] = None) -> "LPDSVM":
         import msgpack  # noqa: F401  (checkpoint backend)
-        # build a template by reading shapes from the file
         import os
-        path = os.path.join(directory, "step_00000000.msgpack")
+        from repro.checkpoint import latest_step
+        # Discover the newest checkpoint unless a step is pinned; shapes are
+        # read straight from the payload (no template needed).
+        if step is None:
+            step = latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no step_*.msgpack under {directory}")
+        path = os.path.join(directory, f"step_{step:08d}.msgpack")
         with open(path, "rb") as f:
             payload = msgpack.unpackb(f.read(), raw=False)
 

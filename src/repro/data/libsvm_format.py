@@ -7,13 +7,36 @@ efficient sparse matrix products".  On TPU the MXU wants dense tiles, so we
 ingest sparse and densify per block (DESIGN.md, changed assumption #1); a CSR
 triple is kept so the densify-block-by-block path never materializes the full
 dense matrix for wide data.
+
+Two out-of-core ingest paths feed `core.streaming.stream_factor_blocks`:
+
+  * `CSRData.iter_dense_blocks(rows)` — the CSR triple fits host RAM and
+    blocks are densified on their way to the device;
+  * `read_libsvm_blocks(path, rows, n_features)` — even the CSR does not:
+    the file is parsed chunkwise and each (dense rows, labels) block is
+    yielded without any global structure being built.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Iterator, Optional, Tuple
 
 import numpy as np
+
+
+def _scatter_dense(n_rows: int, n_features: int, indptr: np.ndarray,
+                   indices: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """One flat scatter instead of a per-row Python loop (ingest hot path)."""
+    out = np.zeros((n_rows, n_features), dtype=np.float32)
+    if len(indices):
+        if indices.max() >= n_features:
+            raise ValueError(
+                f"feature index {int(indices.max()) + 1} exceeds "
+                f"n_features={n_features}")
+        rows = np.repeat(np.arange(n_rows, dtype=np.int64),
+                         np.diff(indptr).astype(np.int64))
+        out.ravel()[rows * n_features + indices] = values
+    return out
 
 
 @dataclasses.dataclass
@@ -30,11 +53,47 @@ class CSRData:
 
     def densify(self, start: int = 0, stop: Optional[int] = None) -> np.ndarray:
         stop = self.n if stop is None else min(stop, self.n)
-        out = np.zeros((stop - start, self.n_features), dtype=np.float32)
-        for r in range(start, stop):
-            lo, hi = self.indptr[r], self.indptr[r + 1]
-            out[r - start, self.indices[lo:hi]] = self.values[lo:hi]
+        lo, hi = int(self.indptr[start]), int(self.indptr[stop])
+        return _scatter_dense(stop - start, self.n_features,
+                              self.indptr[start:stop + 1] - lo,
+                              self.indices[lo:hi], self.values[lo:hi])
+
+    def densify_rows(self, rows) -> np.ndarray:
+        """Gather arbitrary rows (any order) to dense — landmark selection."""
+        rows = np.asarray(rows)
+        out = np.zeros((len(rows), self.n_features), dtype=np.float32)
+        for i, r in enumerate(rows):
+            lo, hi = int(self.indptr[r]), int(self.indptr[r + 1])
+            out[i, self.indices[lo:hi]] = self.values[lo:hi]
         return out
+
+    def iter_dense_blocks(self, rows: int) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """Yield (dense rows, labels) blocks of at most ``rows`` rows; feeds
+        `core.streaming.stream_factor_blocks` so stage 1 never materialises
+        the full dense (n, p) matrix."""
+        if rows < 1:
+            raise ValueError("rows must be positive")
+        for s in range(0, self.n, rows):
+            e = min(s + rows, self.n)
+            yield self.densify(s, e), self.labels[s:e]
+
+
+def _parse_line(line: str, labels, indices, values) -> Tuple[bool, int]:
+    """Parse one `label idx:val ...` line into the accumulators; returns
+    (is_data_line, max feature index seen + 1)."""
+    line = line.strip()
+    if not line or line.startswith("#"):
+        return False, 0
+    parts = line.split()
+    labels.append(float(parts[0]))
+    hi = 0
+    for tok in parts[1:]:
+        i, v = tok.split(":")
+        idx = int(i) - 1
+        hi = max(hi, idx + 1)
+        indices.append(idx)
+        values.append(float(v))
+    return True, hi
 
 
 def read_libsvm(path: str, n_features: Optional[int] = None) -> CSRData:
@@ -43,18 +102,10 @@ def read_libsvm(path: str, n_features: Optional[int] = None) -> CSRData:
     max_idx = 0
     with open(path, "r") as f:
         for line in f:
-            line = line.strip()
-            if not line or line.startswith("#"):
-                continue
-            parts = line.split()
-            labels.append(float(parts[0]))
-            for tok in parts[1:]:
-                i, v = tok.split(":")
-                idx = int(i) - 1
-                max_idx = max(max_idx, idx + 1)
-                indices.append(idx)
-                values.append(float(v))
-            indptr.append(len(indices))
+            is_data, hi = _parse_line(line, labels, indices, values)
+            if is_data:
+                max_idx = max(max_idx, hi)
+                indptr.append(len(indices))
     nf = n_features if n_features is not None else max_idx
     return CSRData(
         indptr=np.asarray(indptr, np.int64),
@@ -63,6 +114,48 @@ def read_libsvm(path: str, n_features: Optional[int] = None) -> CSRData:
         n_features=nf,
         labels=np.asarray(labels),
     )
+
+
+def read_libsvm_blocks(path: str, rows: int,
+                       n_features: int) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Stream a LIBSVM file as (dense rows, labels) blocks of ``rows`` rows.
+
+    Nothing global is ever built — datasets larger than host RAM stream
+    through stage 1 directly.  ``n_features`` must be given (the global
+    maximum index is unknown until EOF in a single pass).
+    """
+    if rows < 1:
+        raise ValueError("rows must be positive")
+
+    def emit(labels, indptr, indices, values):
+        dense = _scatter_dense(len(labels), n_features,
+                               np.asarray(indptr, np.int64),
+                               np.asarray(indices, np.int32),
+                               np.asarray(values, np.float32))
+        return dense, np.asarray(labels)
+
+    labels, indptr, indices, values = [], [0], [], []
+    with open(path, "r") as f:
+        for line in f:
+            is_data, _ = _parse_line(line, labels, indices, values)
+            if is_data:
+                indptr.append(len(indices))
+            if len(labels) == rows:
+                yield emit(labels, indptr, indices, values)
+                labels, indptr, indices, values = [], [0], [], []
+    if labels:
+        yield emit(labels, indptr, indices, values)
+
+
+def count_libsvm_rows(path: str) -> int:
+    """Cheap first pass: number of data rows (landmark sampling needs n)."""
+    n = 0
+    with open(path, "r") as f:
+        for line in f:
+            s = line.strip()
+            if s and not s.startswith("#"):
+                n += 1
+    return n
 
 
 def write_libsvm(path: str, x: np.ndarray, y: np.ndarray,

@@ -72,6 +72,63 @@ def class_conditioned_tokens(n: int, n_classes: int, seq: int, vocab: int,
     return toks.astype(np.int32), y
 
 
+def median_gamma(feats: np.ndarray, sample: int = 256) -> float:
+    """Median-squared-distance heuristic on a row subsample."""
+    sub = np.asarray(feats[:sample])
+    d2 = ((sub[:, None] - sub[None]) ** 2).sum(-1)
+    return float(1.0 / np.median(d2[d2 > 0]))
+
+
+def train_from_libsvm(args, stream_config):
+    """Out-of-core end-to-end path: LIBSVM file -> CSR -> streamed stage 1
+    (`compute_factor_streamed_csr`) -> streamed stage 2.  The dense (n, p)
+    matrix is never materialised; training rows are scored from G."""
+    from repro.core import KernelParams, LPDSVM, StreamConfig
+    from repro.core.streaming import compute_factor_streamed_csr
+    from repro.data import read_libsvm
+
+    t0 = time.time()
+    data = read_libsvm(args.libsvm, n_features=args.n_features or None)
+    t_read = time.time() - t0
+    if args.gamma is None:
+        # random rows, not the file head: LIBSVM files are often label-sorted
+        # and a single-class prefix would bias the median distance
+        rows = np.random.default_rng(0).choice(data.n, min(256, data.n),
+                                               replace=False)
+        args.gamma = median_gamma(data.densify_rows(np.sort(rows)))
+    cfg = stream_config or StreamConfig()
+    kp = KernelParams("rbf", gamma=args.gamma)
+    t0 = time.time()
+    factor = compute_factor_streamed_csr(data, kp, args.budget,
+                                         key=jax.random.PRNGKey(0), config=cfg)
+    t_factor = time.time() - t0
+    svm = LPDSVM(kp, C=args.C, budget=args.budget, tol=1e-2,
+                 stream=True, stream_config=stream_config)
+    svm.fit(None, data.labels, factor=factor)
+    svm.stats.stage1_seconds = t_factor   # factor was computed out here
+    err = float(np.mean(svm.predict_from_factor() != data.labels))
+    print(f"libsvm: {data.n} rows x {data.n_features} features "
+          f"(nnz {len(data.values)}) in {t_read:.1f}s")
+    _report(svm)
+    print(f"train error: {err:.4f}")
+    return err
+
+
+def _report(svm):
+    s2 = svm.stats.stage2_stats
+    print(f"stage1 {svm.stats.stage1_seconds:.2f}s (rank "
+          f"{svm.stats.effective_rank}"
+          f"{', streamed' if svm.stats.stage1_streamed else ''})  "
+          f"stage2 {svm.stats.stage2_seconds:.2f}s "
+          f"({svm.stats.n_tasks} binary SVMs"
+          f"{', streamed' if svm.stats.stage2_streamed else ''})")
+    if s2 is not None:
+        print(f"stage2 stream: tile {s2.tile_rows} rows, {s2.epochs} epochs, "
+              f"{s2.bytes_h2d / 2**20:.1f} MiB H2D / "
+              f"{s2.bytes_d2h / 2**20:.1f} MiB D2H, "
+              f"active {s2.active_history}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -82,16 +139,44 @@ def main():
     ap.add_argument("--C", type=float, default=8.0)
     ap.add_argument("--gamma", type=float, default=None)
     ap.add_argument("--device-budget-mb", type=float, default=0.0,
-                    help="stage-1 device working-set budget; >0 auto-routes "
-                         "to the out-of-core chunked pipeline when exceeded")
+                    help="device working-set budget for BOTH stages; >0 "
+                         "auto-routes onto the out-of-core pipelines when "
+                         "the monolithic working set exceeds it")
     ap.add_argument("--chunk-rows", type=int, default=0,
-                    help="fixed streaming chunk size (0 = derive from budget; "
-                         "without --device-budget-mb this forces streaming)")
+                    help="fixed stage-1 streaming chunk size (0 = derive from "
+                         "budget; without --device-budget-mb this forces "
+                         "streaming)")
+    ap.add_argument("--tile-rows", type=int, default=0,
+                    help="fixed stage-2 G block rows (0 = derive from budget)")
     ap.add_argument("--stream", action="store_true",
-                    help="force the chunked stage-1 pipeline regardless of budget")
+                    help="force the out-of-core pipelines (both stages) "
+                         "regardless of budget")
+    ap.add_argument("--libsvm", default=None,
+                    help="train from a LIBSVM-format file instead of backbone "
+                         "features (end-to-end out-of-core path)")
+    ap.add_argument("--n-features", type=int, default=0,
+                    help="feature count for --libsvm (0 = infer from file)")
     args = ap.parse_args()
     if args.chunk_rows < 0:
         ap.error(f"--chunk-rows must be >= 0, got {args.chunk_rows}")
+    if args.tile_rows < 0:
+        ap.error(f"--tile-rows must be >= 0, got {args.tile_rows}")
+
+    stream_config = None
+    # An explicit chunk/tile size with no budget is a request to stream, not
+    # a hint to the (roomy) default budget; --stream always forces.
+    force = args.stream or ((args.chunk_rows > 0 or args.tile_rows > 0)
+                            and args.device_budget_mb <= 0)
+    if (args.device_budget_mb > 0 or args.chunk_rows > 0
+            or args.tile_rows > 0 or args.stream):
+        from repro.core import StreamConfig
+        stream_config = StreamConfig(
+            device_budget_bytes=int(args.device_budget_mb * 2**20) or 2 << 30,
+            chunk_rows=args.chunk_rows or None,
+            tile_rows=args.tile_rows or None)
+
+    if args.libsvm:
+        return train_from_libsvm(args, stream_config)
 
     cfg = get_config(args.arch, reduced=True)
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
@@ -101,21 +186,9 @@ def main():
                                        cfg.vocab_size)
     feats = extract_features(cfg, params, toks)
     t_feat = time.time() - t0
-    # median-distance heuristic for gamma if not given
     if args.gamma is None:
-        sub = feats[:256]
-        d2 = ((sub[:, None] - sub[None]) ** 2).sum(-1)
-        args.gamma = 1.0 / np.median(d2[d2 > 0])
+        args.gamma = median_gamma(feats)
     n_tr = int(args.n * 0.8)
-    stream_config = None
-    # An explicit chunk size with no budget is a request to stream, not a hint
-    # to the (roomy) default budget; --stream always forces.
-    force = args.stream or (args.chunk_rows > 0 and args.device_budget_mb <= 0)
-    if args.device_budget_mb > 0 or args.chunk_rows > 0 or args.stream:
-        from repro.core import StreamConfig
-        stream_config = StreamConfig(
-            device_budget_bytes=int(args.device_budget_mb * 2**20) or 2 << 30,
-            chunk_rows=args.chunk_rows or None)
     svm = LPDSVM(KernelParams("rbf", gamma=args.gamma), C=args.C,
                  budget=args.budget, tol=1e-2,
                  stream=True if force else None,
@@ -123,11 +196,7 @@ def main():
     svm.fit(feats[:n_tr], y[:n_tr])
     err = svm.error(feats[n_tr:], y[n_tr:])
     print(f"features: {feats.shape} in {t_feat:.1f}s")
-    print(f"stage1 {svm.stats.stage1_seconds:.2f}s (rank "
-          f"{svm.stats.effective_rank}"
-          f"{', streamed' if svm.stats.stage1_streamed else ''})  "
-          f"stage2 {svm.stats.stage2_seconds:.2f}s "
-          f"({svm.stats.n_tasks} binary SVMs)")
+    _report(svm)
     print(f"test error: {err:.4f} (chance {1 - 1/args.classes:.2f})")
     return err
 

@@ -29,6 +29,40 @@ def test_save_requires_fit():
         LPDSVM().save("/tmp/nowhere")
 
 
+def test_save_load_roundtrip_streamed_factor(rng):
+    """A model fitted fully out-of-core (both stages streamed) must roundtrip
+    through save -> load -> predict like any other."""
+    from repro.core import StreamConfig
+    x, y = make_multiclass(400, p=5, n_classes=3, seed=33)
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.3)
+    tiny = StreamConfig(device_budget_bytes=128 << 10)
+    svm = LPDSVM(KernelParams("rbf", gamma=0.2), C=2.0, budget=96,
+                 stream_config=tiny).fit(xtr, ytr)
+    assert svm.stats.stage1_streamed and svm.stats.stage2_streamed
+    with tempfile.TemporaryDirectory() as d:
+        svm.save(d)
+        back = LPDSVM.load(d)
+    np.testing.assert_array_equal(svm.predict(xte), back.predict(xte))
+    np.testing.assert_allclose(svm.decision_function(xte),
+                               back.decision_function(xte), atol=1e-5)
+
+
+def test_load_discovers_latest_step(rng):
+    """`load` must pick the newest step_*.msgpack, not a hardcoded step 0."""
+    import pytest
+    x, y = make_multiclass(300, p=4, n_classes=2, seed=34)
+    svm = LPDSVM(KernelParams("rbf", gamma=0.3), C=1.0, budget=64).fit(x, y)
+    with tempfile.TemporaryDirectory() as d:
+        svm.save(d, step=0)
+        svm.C = 99.0                      # marker visible in the payload
+        svm.save(d, step=17)
+        assert LPDSVM.load(d).C == 99.0           # latest wins
+        assert LPDSVM.load(d, step=0).C != 99.0   # pinning still works
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(FileNotFoundError):
+            LPDSVM.load(d)
+
+
 def test_cross_gamma_warm_start_same_errors(rng):
     x, y = make_multiclass(700, p=8, n_classes=3, seed=32)
     kw = dict(gammas=[0.05, 0.1, 0.2], Cs=[2.0, 8.0], budget=150, folds=3,
