@@ -1,0 +1,179 @@
+"""Polished vs cold stage-2 training: duality-gap-matched comparison.
+
+For each problem the same (factor, TaskBatch) pair is solved by
+  * the cold full-data `solve_batch` at the repo's default config (the
+    paper's eta ~ 5% shrinking cadence, `full_pass_period = 20`),
+  * the cold solver with per-epoch verification (`full_pass_period = 1`) —
+    recorded so the ladder's cadence effect is not silently attributed to
+    the warm starts, and
+  * the coarse-to-fine polish ladder (`core/polish.py`, default schedule
+    n/16 -> n/4 -> n with tolerance annealing),
+reporting wall-clock, total coordinate row-visits, and the final duality
+gap (all modes must reach the cold solve's gap — the comparison is
+gap-matched, not just KKT-matched).  Data is near-separable multiclass
+(the deep-features regime the paper's polishing targets); fine-structure
+problems transfer coarse solutions poorly and break even — see
+docs/architecture.md.  Full record set -> ``BENCH_polish.json``.
+
+    PYTHONPATH=src python -m benchmarks.run polish
+    BENCH_SMOKE=1 PYTHONPATH=src python -m benchmarks.run polish   # fast
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import (KernelParams, SolverConfig, StreamConfig,
+                        compute_factor, make_schedule, solve_batch,
+                        solve_batch_streamed, solve_polished)
+from repro.core.dual_solver import duality_gap
+from repro.core.ovo import build_ovo_tasks
+from repro.data import make_multiclass
+
+OUT_PATH = os.environ.get("BENCH_POLISH_JSON", "BENCH_polish.json")
+SMOKE = bool(os.environ.get("BENCH_SMOKE"))
+
+# (n, budget, classes); near-separable blobs (sep = 2): polishing's regime
+SIZES = (((800, 96, 3),) if SMOKE
+         else ((3_000, 192, 3), (6_000, 256, 3)))
+CONFIG = SolverConfig(tol=1e-3, max_epochs=1000 if SMOKE else 4000)
+REPEATS = 1 if SMOKE else 3
+
+
+def _problem(n: int, budget: int, classes: int):
+    x, y = make_multiclass(n, p=8, n_classes=classes, sep=2.0, seed=7)
+    _, labels = np.unique(y, return_inverse=True)
+    factor = compute_factor(jnp.asarray(x, jnp.float32),
+                            KernelParams("rbf", gamma=0.5), budget)
+    tasks, _ = build_ovo_tasks(labels, classes, 8.0)
+    return factor, tasks
+
+
+def _max_gap(G, tasks, alpha) -> float:
+    return max(float(duality_gap(jnp.asarray(G), tasks.idx[t], tasks.y[t],
+                                 tasks.c[t], jnp.asarray(alpha)[t]))
+               for t in range(tasks.n_tasks))
+
+
+def run() -> None:
+    records = []
+    for n, budget, classes in SIZES:
+        factor, tasks = _problem(n, budget, classes)
+        G, n_pad = factor.G, tasks.idx.shape[1]
+        rank = G.shape[1]
+
+        cold_by_period = {}
+        for period, mode in ((CONFIG.full_pass_period, "cold"),
+                             (1, "cold_p1")):
+            cfg = dataclasses.replace(CONFIG, full_pass_period=period)
+
+            def cold():
+                solve_batch(G, tasks, cfg).w.block_until_ready()
+
+            t = timeit(cold, repeats=REPEATS)
+            res = solve_batch(G, tasks, cfg)
+            visits = int(np.asarray(res.epochs).sum()) * n_pad
+            gap = _max_gap(G, tasks, res.alpha)
+            cold_by_period[mode] = (visits, gap, t)
+            emit(f"polish_{mode}_n{n}_B{rank}", t * 1e6,
+                 f"{visits} visits gap {gap:.2e}")
+            records.append({"mode": mode, "n": n, "rank": rank,
+                            "n_tasks": tasks.n_tasks,
+                            "full_pass_period": period, "seconds": t,
+                            "row_visits": visits, "max_duality_gap": gap,
+                            "epochs": int(np.asarray(res.epochs).sum())})
+
+        sched = make_schedule(3)
+        holder = {}
+
+        def polished():
+            holder["out"] = solve_polished(factor, tasks, CONFIG, sched,
+                                           return_trace=True, gap_trace=False)
+            np.asarray(holder["out"][0].w)
+
+        t = timeit(polished, repeats=REPEATS)
+        res, trace = holder["out"]
+        gap = _max_gap(G, tasks, res.alpha)
+        visits = trace.total_row_visits
+        cold_v, cold_gap, cold_t = cold_by_period["cold"]
+        # gap-matched: the target is the cold solve's gap, tol-scaled (both
+        # runs stop at the same KKT tolerance; see tests/test_polish.py)
+        target = cold_gap + CONFIG.tol * (
+            1.0 + float(np.max(np.abs(np.asarray(res.dual_obj)))))
+        emit(f"polish_ladder_n{n}_B{rank}", t * 1e6,
+             f"{visits} visits gap {gap:.2e} "
+             f"{cold_v / visits:.2f}x fewer visits {cold_t / t:.2f}x faster")
+        records.append({
+            "mode": "polished", "n": n, "rank": rank,
+            "n_tasks": tasks.n_tasks, "seconds": t, "row_visits": visits,
+            "max_duality_gap": gap, "gap_target": target,
+            "reaches_target": bool(gap <= target),
+            "visits_ratio_vs_cold": cold_v / visits,
+            "speedup_vs_cold": cold_t / t,
+            "levels": [{"fraction": lv.fraction, "tol": lv.tol,
+                        "n_rows": lv.n_rows, "streamed": lv.streamed,
+                        "epochs": int(lv.epochs.sum()),
+                        "row_visits": lv.row_visits,
+                        "seconds": lv.seconds}
+                       for lv in trace.levels]})
+
+        if not SMOKE and n == SIZES[-1][0]:
+            # streamed pair: host-resident G, polish vs cold row-block solver
+            G_host = np.asarray(G)
+            sfac = dataclasses.replace(factor, G=G_host, streamed=True)
+            scfg = StreamConfig(tile_rows=1_024)
+
+            def cold_stream():
+                solve_batch_streamed(G_host, tasks, CONFIG,
+                                     stream_config=scfg)
+
+            t_cs = timeit(cold_stream, repeats=1)
+            _, st = solve_batch_streamed(G_host, tasks, CONFIG,
+                                         stream_config=scfg,
+                                         return_stats=True)
+
+            def pol_stream():
+                holder["out"] = solve_polished(
+                    sfac, tasks, CONFIG, sched, stream=True,
+                    stream_config=scfg, return_trace=True, gap_trace=False)
+
+            t_ps = timeit(pol_stream, repeats=1)
+            _, tr = holder["out"]
+            fin = tr.final.stream_stats
+            emit(f"polish_stream_n{n}_B{rank}", t_ps * 1e6,
+                 f"{tr.total_row_visits} visits "
+                 f"{fin.bytes_h2d / 2**20:.1f}MiB h2d "
+                 f"(cold {st.kernel_calls * st.tile_rows} visits "
+                 f"{st.bytes_h2d / 2**20:.1f}MiB)")
+            records.append({
+                "mode": "streamed_pair", "n": n, "rank": rank,
+                "cold_seconds": t_cs, "polished_seconds": t_ps,
+                "cold_row_visits": st.kernel_calls * st.tile_rows,
+                "polished_row_visits": tr.total_row_visits,
+                "cold_bytes_h2d": st.bytes_h2d,
+                "polished_final_bytes_h2d": fin.bytes_h2d})
+
+    payload = {"benchmark": "polish",
+               "backend": jax.default_backend(),
+               "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+               "config": {"tol": CONFIG.tol, "max_epochs": CONFIG.max_epochs,
+                          "schedule": {"fractions": make_schedule(3).fractions,
+                                       "tol_factors":
+                                           make_schedule(3).tol_factors,
+                                       "full_pass_period": 1}},
+               "records": records}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {OUT_PATH} ({len(records)} records)", flush=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

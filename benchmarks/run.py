@@ -11,9 +11,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (eigdrop, fig3_stages, kernel_micro, shrinking,
-                            stage2_stream, streaming, table2_solvers,
-                            table3_cv_grid)
+    from benchmarks import (eigdrop, fig3_stages, kernel_micro, polish,
+                            shrinking, stage2_stream, streaming,
+                            table2_solvers, table3_cv_grid)
     suites = {
         "table2": table2_solvers.run,
         "table3": table3_cv_grid.run,
@@ -23,6 +23,7 @@ def main() -> None:
         "kernels": kernel_micro.run,
         "streaming": streaming.run,
         "stage2": stage2_stream.run,
+        "polish": polish.run,
     }
     picked = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

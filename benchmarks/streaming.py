@@ -30,8 +30,14 @@ from repro.data import make_checker
 OUT_PATH = os.environ.get("BENCH_STREAMING_JSON", "BENCH_streaming.json")
 SMOKE = bool(os.environ.get("BENCH_SMOKE"))
 
-# (n, budget); BENCH_SMOKE=1 shrinks everything for the fast CI loop
+# (n, budget); BENCH_SMOKE=1 shrinks everything for the fast CI loop.
+# BENCH_STREAMING_N pins a single row count (with optional
+# BENCH_STREAMING_BUDGET) so the ROADMAP's n ~ 10^6 trajectory can be
+# recorded on real accelerators without code edits.
 SIZES = ((2_000, 128),) if SMOKE else ((2_000, 128), (8_000, 256), (20_000, 256))
+_N = int(os.environ.get("BENCH_STREAMING_N", "0"))
+if _N:
+    SIZES = ((_N, int(os.environ.get("BENCH_STREAMING_BUDGET", "256"))),)
 CHUNKS = (512,) if SMOKE else (1_024, 4_096)
 PREFETCH = (2,) if SMOKE else (1, 2)
 

@@ -1,9 +1,11 @@
 """LPD-SVM core: the paper's contribution as a composable JAX module."""
-from repro.core.kernel_fn import KernelParams, gram, kernel_diag
+from repro.core.kernel_fn import KernelParams, gram, kernel_diag, median_gamma
 from repro.core.nystrom import LowRankFactor, compute_factor, select_landmarks
 from repro.core.dual_solver import (SolverConfig, TaskBatch, SolveResult,
                                     solve_one, solve_batch, duality_gap)
 from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
+from repro.core.polish import (PolishSchedule, PolishTrace, make_schedule,
+                               solve_polished)
 from repro.core.solver_stream import (Stage2StreamStats, auto_tile_rows,
                                       should_stream_stage2,
                                       solve_batch_streamed)
@@ -18,10 +20,11 @@ from repro.core.streaming import (StreamConfig, auto_chunk_rows,
                                   stream_factor_blocks, stream_factor_rows)
 
 __all__ = [
-    "KernelParams", "gram", "kernel_diag",
+    "KernelParams", "gram", "kernel_diag", "median_gamma",
     "LowRankFactor", "compute_factor", "select_landmarks",
     "SolverConfig", "TaskBatch", "SolveResult", "solve_one", "solve_batch",
     "duality_gap", "build_ovo_tasks", "class_pairs", "ovo_vote",
+    "PolishSchedule", "PolishTrace", "make_schedule", "solve_polished",
     "Stage2StreamStats", "auto_tile_rows", "should_stream_stage2",
     "solve_batch_streamed",
     "LPDSVM", "grid_search", "cross_validate", "kfold_masks",

@@ -26,15 +26,23 @@ from repro.core.dual_solver import SolverConfig, TaskBatch, solve_batch
 from repro.core.kernel_fn import KernelParams, gram
 from repro.core.nystrom import LowRankFactor, compute_factor, wait_for_factor
 from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
+from repro.core.polish import PolishSchedule, make_schedule, solve_polished
 from repro.core.solver_stream import route_stage2, solve_batch_streamed
 from repro.core.streaming import StreamConfig
 
 
 def _solve_routed(factor: LowRankFactor, tasks: TaskBatch,
                   config: SolverConfig, solve_fn: Callable,
-                  stream, stream_config: Optional[StreamConfig]):
+                  stream, stream_config: Optional[StreamConfig],
+                  polish_schedule: Optional[PolishSchedule] = None):
     """Stage-2 dispatch (see `solver_stream.route_stage2`, shared with
-    `LPDSVM._solve_stage2`)."""
+    `LPDSVM._solve_stage2`); with a `polish_schedule` the cell runs the
+    coarse-to-fine ladder (`core/polish.py`), composing with the C-grid warm
+    start carried in `tasks.alpha0`."""
+    if polish_schedule is not None:
+        return solve_polished(factor, tasks, config, polish_schedule,
+                              stream=stream, stream_config=stream_config,
+                              solve_fn=solve_fn, gap_trace=False)
     if route_stage2(factor, tasks, stream, stream_config, solve_fn,
                     solve_batch):
         return solve_batch_streamed(factor.G, tasks, config,
@@ -133,6 +141,9 @@ def grid_search(
     warm_start_gamma: bool = False,
     stream: Optional[bool] = None,
     stream_config: Optional[StreamConfig] = None,
+    polish: bool = False,
+    polish_levels: int = 3,
+    polish_schedule: Optional[PolishSchedule] = None,
 ) -> GridResult:
     """Full grid search with k-fold CV, G reuse per gamma, warm starts over C.
 
@@ -144,12 +155,19 @@ def grid_search(
     stay feasible (same box, same task layout); only the geometry changed, so
     nearby gammas start close to optimal.  The paper warm-starts only across
     C (sec. 4).
+
+    ``polish`` runs every cell through the coarse-to-fine ladder
+    (`core/polish.py`); it composes with both warm-start axes — the carried
+    alphas seed the ladder's coarse levels too — and selects the same cell
+    (the error surface is unchanged, only the trajectory is cheaper).
     """
     x = np.asarray(x, np.float32)
     classes, labels = np.unique(np.asarray(y), return_inverse=True)
     n_classes = len(classes)
     val_masks = kfold_masks(x.shape[0], folds, seed)
     Cs = sorted(float(c) for c in Cs)
+    if polish and polish_schedule is None:
+        polish_schedule = make_schedule(levels=polish_levels)
 
     errors = np.zeros((len(gammas), len(Cs)))
     cell_sec = np.zeros_like(errors)
@@ -174,7 +192,7 @@ def grid_search(
             tasks, _ = build_cv_tasks(labels, n_classes, C, val_masks,
                                       warm=warm if warm_start else None)
             res = _solve_routed(factor, tasks, config, solve_fn,
-                                stream, stream_config)
+                                stream, stream_config, polish_schedule)
             wait_for_factor(res.w)
             dt = time.perf_counter() - t0
             t_stage2 += dt
@@ -202,6 +220,7 @@ def cross_validate(
     factor: Optional[LowRankFactor] = None,
     stream: Optional[bool] = None,
     stream_config: Optional[StreamConfig] = None,
+    polish_schedule: Optional[PolishSchedule] = None,
 ) -> Tuple[float, LowRankFactor]:
     """k-fold CV error for one (kernel, C); returns (error, reusable factor)."""
     x = np.asarray(x, np.float32)
@@ -213,6 +232,7 @@ def cross_validate(
                                 stream=stream, stream_config=stream_config)
     val_masks = kfold_masks(x.shape[0], folds, seed)
     tasks, _ = build_cv_tasks(labels, n_classes, float(C), val_masks)
-    res = _solve_routed(factor, tasks, config, solve_fn, stream, stream_config)
+    res = _solve_routed(factor, tasks, config, solve_fn, stream, stream_config,
+                        polish_schedule)
     err = _cv_error(factor, labels, n_classes, res.w, val_masks)
     return err, factor

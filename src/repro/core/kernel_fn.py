@@ -13,6 +13,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 KERNELS = ("rbf", "linear", "poly", "tanh")
 
@@ -61,6 +62,21 @@ def gram(x: jnp.ndarray, z: jnp.ndarray, params: KernelParams) -> jnp.ndarray:
     x_sq = jnp.sum(x * x, axis=-1)
     z_sq = jnp.sum(z * z, axis=-1)
     return apply_epilogue(dot, x_sq, z_sq, params)
+
+
+def median_gamma(x: np.ndarray, sample: int = 256, seed: int = 0) -> float:
+    """Median-squared-distance heuristic: gamma = 1 / median ||x_i - x_j||^2
+    over a random row subsample (host-side numpy — this is data inspection,
+    not compute).  Random rows, not the head: real datasets are often
+    label-sorted and a single-class prefix would bias the median."""
+    x = np.asarray(x, np.float32)
+    if x.shape[0] > sample:
+        rows = np.random.default_rng(seed).choice(x.shape[0], sample,
+                                                  replace=False)
+        x = x[np.sort(rows)]
+    d2 = ((x[:, None] - x[None]) ** 2).sum(-1)
+    d2 = d2[d2 > 0]
+    return float(1.0 / np.median(d2)) if d2.size else 1.0
 
 
 def kernel_diag(x: jnp.ndarray, params: KernelParams) -> jnp.ndarray:

@@ -22,6 +22,8 @@ from repro.core.dual_solver import SolveResult, SolverConfig, TaskBatch, solve_b
 from repro.core.kernel_fn import KernelParams, gram
 from repro.core.nystrom import LowRankFactor, compute_factor, wait_for_factor
 from repro.core.ovo import build_ovo_tasks, ovo_decision_values, ovo_vote
+from repro.core.polish import (PolishSchedule, PolishTrace, make_schedule,
+                               solve_polished)
 from repro.core.solver_stream import (Stage2StreamStats, route_stage2,
                                       solve_batch_streamed)
 from repro.core.streaming import StreamConfig
@@ -40,6 +42,9 @@ class FitStats:
     stage1_streamed: bool = False   # True -> G came from the out-of-core path
     stage2_streamed: bool = False   # True -> solver streamed G row-blocks
     stage2_stats: Optional[Stage2StreamStats] = None
+    polished: bool = False          # True -> stage 2 ran the polish ladder
+    polish_trace: Optional[PolishTrace] = None  # per-level epochs/violations/
+                                                # duality-gap trajectory
 
 
 class LPDSVM:
@@ -56,6 +61,10 @@ class LPDSVM:
         solve_fn: Callable = solve_batch,
         stream: Optional[bool] = None,
         stream_config: Optional[StreamConfig] = None,
+        polish: bool = False,
+        polish_levels: int = 3,
+        polish_schedule: Optional[PolishSchedule] = None,
+        polish_gap_trace: bool = True,
     ):
         self.kernel = kernel
         self.C = float(C)
@@ -70,6 +79,15 @@ class LPDSVM:
         # None -> always the monolithic device-resident paths.
         self.stream = stream
         self.stream_config = stream_config
+        # Polishing (core/polish.py): coarse-to-fine warm-started stage 2.
+        # `polish=True` builds the default geometric ladder (`polish_levels`
+        # deep); an explicit `polish_schedule` wins.
+        self.polish_schedule = (
+            polish_schedule if polish_schedule is not None
+            else make_schedule(levels=polish_levels) if polish else None)
+        # Per-level duality gaps in the trace cost extra host/device work at
+        # scale (one G sweep per task per level) — disablable for hot fits.
+        self.polish_gap_trace = polish_gap_trace
         # fitted state
         self.factor: Optional[LowRankFactor] = None
         self.classes_: Optional[np.ndarray] = None
@@ -130,12 +148,25 @@ class LPDSVM:
         return self
 
     def _solve_stage2(self, tasks: TaskBatch) -> SolveResult:
-        """Stage-2 dispatch (see `solver_stream.route_stage2`): the streamed
-        row-block solver when G must stay host-resident, else the jit'd
-        `solve_batch`."""
+        """Stage-2 dispatch (see `solver_stream.route_stage2`): the polish
+        ladder when enabled, the streamed row-block solver when G must stay
+        host-resident, else the jit'd `solve_batch`."""
         G = self.factor.G
         self.stats.stage2_streamed = False      # refits must not report the
         self.stats.stage2_stats = None          # previous fit's stream stats
+        self.stats.polished = False
+        self.stats.polish_trace = None
+        if self.polish_schedule is not None:
+            res, trace = solve_polished(
+                self.factor, tasks, self.config, self.polish_schedule,
+                stream=self.stream, stream_config=self.stream_config,
+                solve_fn=self.solve_fn, gap_trace=self.polish_gap_trace,
+                return_trace=True)
+            self.stats.polished = True
+            self.stats.polish_trace = trace
+            self.stats.stage2_streamed = trace.final.streamed
+            self.stats.stage2_stats = trace.final.stream_stats
+            return res
         if not route_stage2(self.factor, tasks, self.stream,
                             self.stream_config, self.solve_fn, solve_batch):
             return self.solve_fn(G, tasks, self.config)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import KernelParams, LPDSVM
+from repro.core import KernelParams, LPDSVM, median_gamma
 from repro.models import init_model
 from repro.models import model as M
 
@@ -72,13 +72,6 @@ def class_conditioned_tokens(n: int, n_classes: int, seq: int, vocab: int,
     return toks.astype(np.int32), y
 
 
-def median_gamma(feats: np.ndarray, sample: int = 256) -> float:
-    """Median-squared-distance heuristic on a row subsample."""
-    sub = np.asarray(feats[:sample])
-    d2 = ((sub[:, None] - sub[None]) ** 2).sum(-1)
-    return float(1.0 / np.median(d2[d2 > 0]))
-
-
 def train_from_libsvm(args, stream_config):
     """Out-of-core end-to-end path: LIBSVM file -> CSR -> streamed stage 1
     (`compute_factor_streamed_csr`) -> streamed stage 2.  The dense (n, p)
@@ -91,8 +84,8 @@ def train_from_libsvm(args, stream_config):
     data = read_libsvm(args.libsvm, n_features=args.n_features or None)
     t_read = time.time() - t0
     if args.gamma is None:
-        # random rows, not the file head: LIBSVM files are often label-sorted
-        # and a single-class prefix would bias the median distance
+        # densify only a row subsample for the heuristic (median_gamma's own
+        # sampler never sees the CSR rows it was not handed)
         rows = np.random.default_rng(0).choice(data.n, min(256, data.n),
                                                replace=False)
         args.gamma = median_gamma(data.densify_rows(np.sort(rows)))
@@ -103,7 +96,8 @@ def train_from_libsvm(args, stream_config):
                                          key=jax.random.PRNGKey(0), config=cfg)
     t_factor = time.time() - t0
     svm = LPDSVM(kp, C=args.C, budget=args.budget, tol=1e-2,
-                 stream=True, stream_config=stream_config)
+                 stream=True, stream_config=stream_config,
+                 polish=args.polish, polish_levels=args.polish_levels)
     svm.fit(None, data.labels, factor=factor)
     svm.stats.stage1_seconds = t_factor   # factor was computed out here
     err = float(np.mean(svm.predict_from_factor() != data.labels))
@@ -127,6 +121,18 @@ def _report(svm):
               f"{s2.bytes_h2d / 2**20:.1f} MiB H2D / "
               f"{s2.bytes_d2h / 2**20:.1f} MiB D2H, "
               f"active {s2.active_history}")
+    tr = svm.stats.polish_trace
+    if tr is not None:
+        for lv in tr.levels:
+            finite = np.isfinite(lv.duality_gap)
+            gap = float(np.max(lv.duality_gap[finite])) if finite.any() \
+                else float("nan")
+            print(f"polish level {lv.fraction:.4g}: {lv.n_rows} rows, "
+                  f"tol {lv.tol:.3g}, {int(lv.epochs.max())} epochs max, "
+                  f"gap {gap:.3g}, {lv.row_visits} row-visits"
+                  f"{', streamed' if lv.streamed else ''}")
+        print(f"polish total: {tr.total_row_visits} row-visits over "
+              f"{len(tr.levels)} levels")
 
 
 def main():
@@ -151,6 +157,13 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="force the out-of-core pipelines (both stages) "
                          "regardless of budget")
+    ap.add_argument("--polish", action="store_true",
+                    help="coarse-to-fine warm-started stage 2: solve a "
+                         "nested subsample ladder (n/16 -> n/4 -> n by "
+                         "default) with tolerance annealing so the full-data "
+                         "pass is a short polish (core/polish.py)")
+    ap.add_argument("--polish-levels", type=int, default=3,
+                    help="depth of the polish ladder (default 3)")
     ap.add_argument("--libsvm", default=None,
                     help="train from a LIBSVM-format file instead of backbone "
                          "features (end-to-end out-of-core path)")
@@ -161,6 +174,8 @@ def main():
         ap.error(f"--chunk-rows must be >= 0, got {args.chunk_rows}")
     if args.tile_rows < 0:
         ap.error(f"--tile-rows must be >= 0, got {args.tile_rows}")
+    if args.polish_levels < 1:
+        ap.error(f"--polish-levels must be >= 1, got {args.polish_levels}")
 
     stream_config = None
     # An explicit chunk/tile size with no budget is a request to stream, not
@@ -192,7 +207,8 @@ def main():
     svm = LPDSVM(KernelParams("rbf", gamma=args.gamma), C=args.C,
                  budget=args.budget, tol=1e-2,
                  stream=True if force else None,
-                 stream_config=stream_config)
+                 stream_config=stream_config,
+                 polish=args.polish, polish_levels=args.polish_levels)
     svm.fit(feats[:n_tr], y[:n_tr])
     err = svm.error(feats[n_tr:], y[n_tr:])
     print(f"features: {feats.shape} in {t_feat:.1f}s")

@@ -1,0 +1,90 @@
+"""Objective helpers backing the polish stopping evidence:
+`dual_objective`, `primal_objective`, `duality_gap` (dual_solver.py).
+
+Weak duality (gap >= 0 for any feasible alpha), monotone gap decrease over
+the solver trajectory, and gap -> ~0 at convergence.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dual_solver import (SolverConfig, dual_objective, duality_gap,
+                                    primal_objective, solve_one)
+from repro.core.kernel_fn import KernelParams
+from repro.core.nystrom import compute_factor
+
+
+def _problem(rng, n=400, C=4.0, budget=128):
+    x = rng.normal(size=(n, 5)).astype(np.float32)
+    y = np.where(x[:, 0] * x[:, 1] + 0.3 * x[:, 2] > 0, 1.0, -1.0) \
+        .astype(np.float32)
+    fac = compute_factor(jnp.asarray(x), KernelParams("rbf", gamma=0.7),
+                         budget)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    c = jnp.full((n,), C, jnp.float32)
+    return fac.G, idx, jnp.asarray(y), c
+
+
+def test_gap_nonnegative_for_feasible_alpha(rng):
+    """Weak duality: P(w(alpha)) - D(alpha) >= 0 for ANY alpha in the box."""
+    G, idx, y, c = _problem(rng)
+    for seed in range(3):
+        a = jnp.asarray(np.random.default_rng(seed)
+                        .uniform(0.0, 4.0, size=c.shape).astype(np.float32))
+        gap = float(duality_gap(G, idx, y, c, a))
+        assert gap >= -1e-3, gap
+    # alpha = 0: D = 0, P = C * n (all margins violated by exactly 1)
+    gap0 = float(duality_gap(G, idx, y, c, jnp.zeros_like(c)))
+    assert abs(gap0 - 4.0 * c.shape[0]) < 1e-2 * 4.0 * c.shape[0]
+
+
+def test_dual_objective_matches_solver(rng):
+    G, idx, y, c = _problem(rng)
+    res = solve_one(G, idx, y, c, jnp.zeros_like(c),
+                    SolverConfig(tol=1e-3, max_epochs=2000))
+    d = float(dual_objective(G, idx, y, res.alpha))
+    assert abs(d - float(res.dual_obj)) < 1e-3 * (1.0 + abs(d))
+
+
+def test_primal_objective_fields(rng):
+    G, idx, y, c = _problem(rng, C=2.0)
+    # padding rows (c = 0) must not count as real examples
+    pad = 32
+    idx_p = jnp.concatenate([idx, jnp.zeros((pad,), jnp.int32)])
+    y_p = jnp.concatenate([y, jnp.ones((pad,))])
+    c_p = jnp.concatenate([c, jnp.zeros((pad,))])
+    w = jnp.zeros((G.shape[1],), jnp.float32)
+    p, lam, n = primal_objective(G, idx_p, y_p, c_p, w)
+    assert int(n) == c.shape[0]
+    assert abs(float(lam) - 1.0 / (2.0 * c.shape[0])) < 1e-9
+    # w = 0: every real margin is 0 -> hinge = 1 each -> P = C * n
+    assert abs(float(p) - 2.0 * c.shape[0]) < 1e-3
+
+
+def test_gap_monotone_decrease_over_epochs(rng):
+    """The solver ascends the dual; the gap must (modulo float noise) shrink
+    along the trajectory and end near zero."""
+    G, idx, y, c = _problem(rng)
+    checkpoints = [1, 4, 16, 64, 256]
+    gaps, duals = [], []
+    for e in checkpoints:
+        res = solve_one(G, idx, y, c, jnp.zeros_like(c),
+                        SolverConfig(tol=1e-9, max_epochs=e,
+                                     full_pass_period=1))
+        gaps.append(float(duality_gap(G, idx, y, c, res.alpha)))
+        duals.append(float(res.dual_obj))
+    # dual ascent is exactly monotone
+    assert all(b >= a - 1e-4 * (1 + abs(a))
+               for a, b in zip(duals, duals[1:])), duals
+    # the gap decreases along the trajectory (small slack for the primal term)
+    assert all(b <= a + 0.05 * gaps[0] for a, b in zip(gaps, gaps[1:])), gaps
+    assert gaps[-1] < gaps[0] * 0.05
+
+
+def test_gap_vanishes_at_convergence(rng):
+    G, idx, y, c = _problem(rng)
+    res = solve_one(G, idx, y, c, jnp.zeros_like(c),
+                    SolverConfig(tol=1e-4, max_epochs=5000))
+    assert float(res.violation) < 1e-4
+    gap = float(duality_gap(G, idx, y, c, res.alpha))
+    assert 0.0 <= gap + 1e-4
+    assert gap < 1e-2 * abs(float(res.dual_obj))
