@@ -1,8 +1,9 @@
 # One-word entry points for the verify / bench / lint loops.
 #
 #   make test        tier-1 suite (the invocation ROADMAP.md pins)
-#   make bench       out-of-core + polish curves -> BENCH_streaming.json +
-#                    BENCH_stage2_stream.json + BENCH_polish.json
+#   make bench       out-of-core + mesh-farm + polish curves ->
+#                    BENCH_streaming.json + BENCH_stage2_stream.json +
+#                    BENCH_stage2_mesh.json + BENCH_polish.json
 #   make bench-smoke same suites at smoke sizes (fast CI loop)
 #   make bench-all   every benchmark suite (paper tables + streaming)
 #   make lint        byte-compile + import smoke over all python trees
@@ -19,15 +20,16 @@ test:
 	$(PY) -m pytest -x -q
 
 bench:
-	$(PY) -m benchmarks.run streaming stage2 polish
+	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish
 
 # smoke-sized records must not clobber the committed BENCH_*.json trajectory
 bench-smoke:
 	BENCH_SMOKE=1 \
 	BENCH_STREAMING_JSON=/tmp/BENCH_streaming.smoke.json \
 	BENCH_STAGE2_STREAM_JSON=/tmp/BENCH_stage2_stream.smoke.json \
+	BENCH_STAGE2_MESH_JSON=/tmp/BENCH_stage2_mesh.smoke.json \
 	BENCH_POLISH_JSON=/tmp/BENCH_polish.smoke.json \
-	$(PY) -m benchmarks.run streaming stage2 polish
+	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish
 
 bench-all:
 	$(PY) -m benchmarks.run

@@ -12,7 +12,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (eigdrop, fig3_stages, kernel_micro, polish,
-                            shrinking, stage2_stream, streaming,
+                            shrinking, stage2_mesh, stage2_stream, streaming,
                             table2_solvers, table3_cv_grid)
     suites = {
         "table2": table2_solvers.run,
@@ -23,6 +23,7 @@ def main() -> None:
         "kernels": kernel_micro.run,
         "streaming": streaming.run,
         "stage2": stage2_stream.run,
+        "stage2_mesh": stage2_mesh.run,
         "polish": polish.run,
     }
     picked = sys.argv[1:] or list(suites)

@@ -8,10 +8,12 @@ from repro.core.polish import (PolishSchedule, PolishTrace, make_schedule,
                                solve_polished)
 from repro.core.solver_stream import (Stage2StreamStats, auto_tile_rows,
                                       should_stream_stage2,
-                                      solve_batch_streamed)
+                                      solve_batch_streamed,
+                                      solve_streamed_auto, tune_prefetch)
 from repro.core.svm import LPDSVM
 from repro.core.cv import grid_search, cross_validate, kfold_masks
-from repro.core.distributed import (solve_tasks_sharded,
+from repro.core.distributed import (balance_task_split, solve_tasks_sharded,
+                                    solve_tasks_streamed,
                                     solve_tasks_streamed_mesh,
                                     stream_factor_over_mesh)
 from repro.core.streaming import (StreamConfig, auto_chunk_rows,
@@ -26,10 +28,10 @@ __all__ = [
     "duality_gap", "build_ovo_tasks", "class_pairs", "ovo_vote",
     "PolishSchedule", "PolishTrace", "make_schedule", "solve_polished",
     "Stage2StreamStats", "auto_tile_rows", "should_stream_stage2",
-    "solve_batch_streamed",
+    "solve_batch_streamed", "solve_streamed_auto", "tune_prefetch",
     "LPDSVM", "grid_search", "cross_validate", "kfold_masks",
-    "solve_tasks_sharded", "solve_tasks_streamed_mesh",
-    "stream_factor_over_mesh",
+    "balance_task_split", "solve_tasks_sharded", "solve_tasks_streamed",
+    "solve_tasks_streamed_mesh", "stream_factor_over_mesh",
     "StreamConfig", "auto_chunk_rows", "compute_factor_streamed",
     "compute_factor_streamed_csr", "should_stream", "stream_factor_blocks",
     "stream_factor_rows",

@@ -27,7 +27,7 @@ from repro.core.kernel_fn import KernelParams, gram
 from repro.core.nystrom import LowRankFactor, compute_factor, wait_for_factor
 from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
 from repro.core.polish import PolishSchedule, make_schedule, solve_polished
-from repro.core.solver_stream import route_stage2, solve_batch_streamed
+from repro.core.solver_stream import route_stage2, solve_streamed_auto
 from repro.core.streaming import StreamConfig
 
 
@@ -45,8 +45,8 @@ def _solve_routed(factor: LowRankFactor, tasks: TaskBatch,
                               solve_fn=solve_fn, gap_trace=False)
     if route_stage2(factor, tasks, stream, stream_config, solve_fn,
                     solve_batch):
-        return solve_batch_streamed(factor.G, tasks, config,
-                                    stream_config=stream_config)
+        return solve_streamed_auto(factor.G, tasks, config,
+                                   stream_config=stream_config)
     return solve_fn(factor.G, tasks, config)
 
 

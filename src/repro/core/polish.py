@@ -61,7 +61,8 @@ from repro.core.dual_solver import (SolveResult, SolverConfig, TaskBatch,
                                     solve_batch)
 from repro.core.solver_stream import (Stage2StreamStats, route_stage2,
                                       should_stream_stage2,
-                                      solve_batch_streamed)
+                                      solve_batch_streamed,
+                                      solve_streamed_auto)
 from repro.core.streaming import StreamConfig
 
 
@@ -289,7 +290,9 @@ def solve_polished(
                                     solve_fn, solve_batch)
             cfg_l = _level_config(li, streamed)
             if streamed:
-                res, sstats = solve_batch_streamed(
+                # Final level: the full-size stream — overlapped over every
+                # local device when there are several (shared block reader).
+                res, sstats = solve_streamed_auto(
                     G, tasks_l, cfg_l, stream_config=stream_config,
                     return_stats=True)
             else:

@@ -19,6 +19,21 @@ traffic is amortised over the whole OVO/CV task batch.  The per-task weight
 vector w stays device-resident across blocks and epochs — the cross-block
 analogue of the SMO kernel's VMEM scratchpad (kernels/smo.py).
 
+The per-epoch block pass lives in `_Stage2Engine`, a per-(device, task-shard)
+state machine: a driver (`drive_streamed_engines`) owns the lockstep epoch
+schedule, reads each (tile, B) block of G ONCE per shared pass
+(`iter_shared_blocks`) and fans it out to every live engine, while compacted
+cheap epochs run engine-locally over each shard's own active-row union.
+`solve_batch_streamed` is the one-engine instantiation; the overlapped
+multi-device task farm (`core/distributed.py::solve_tasks_streamed`) drives
+many engines behind per-device host workers so H2D, compute, and D2H overlap
+ACROSS devices and the host-resident G is streamed once per pass instead of
+once per device.  Blocks can optionally cross the bus as bfloat16
+(`StreamConfig.block_dtype="bf16"`, upcast on device) for half the stage-2
+H2D bytes, and `tune_prefetch` closes a minimal overlap-autotune loop: when
+the first full pass measures H2D time exceeding the compute/drain time it is
+meant to hide, the in-flight queue is deepened.
+
 Shrinking follows `core/compact.py`'s bucket-compaction design, but here it
 cuts H2D *bytes*, not just FLOPs: after every full pass the union of active
 rows over all unconverged tasks is gathered host-side, and the cheap epochs
@@ -48,10 +63,11 @@ import dataclasses
 import math
 import time
 from functools import partial
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
 import numpy as np
 
 from repro.core.dual_solver import (DELTA_EPS, Q_FLOOR, SolveResult,
@@ -177,7 +193,12 @@ def default_epoch_fn() -> Callable:
 
 @jax.jit
 def _row_sq(G):
-    """Per-row squared norms — same op as `solve_one`'s q computation."""
+    """Per-row squared norms — same op as `solve_one`'s q computation.
+
+    Recomputed on device from the streamed block every pass: q is a pure
+    function of the block's bytes, so this is bit-identical to caching it on
+    host while saving the q H2D/D2H round trips entirely.
+    """
     return jnp.sum(G ** 2, axis=-1)
 
 
@@ -185,6 +206,13 @@ def _row_sq(G):
 def _accum_w(w, G, alpha, y):
     """Warm-start w accumulation: w += (alpha * y) @ G_block."""
     return w + (alpha * y) @ G
+
+
+@jax.jit
+def _upcast32(g):
+    """Device-side upcast of a bf16 wire block back to the fp32 the epoch
+    kernels accumulate in (the H2D copy moved half the bytes)."""
+    return g.astype(jnp.float32)
 
 
 def _put(a, device=None):
@@ -202,12 +230,30 @@ def _put(a, device=None):
 
 
 # ---------------------------------------------------------------------------
-# the streamed batch solver
+# the streamed batch solver: stats, block reader, per-device engine, driver
 # ---------------------------------------------------------------------------
+
+BLOCK_DTYPES = {"f32": np.float32, "bf16": ml_dtypes.bfloat16}
+
 
 @dataclasses.dataclass
 class Stage2StreamStats:
-    """Traffic + convergence accounting of one streamed stage-2 solve."""
+    """Traffic + convergence accounting of one streamed stage-2 solve.
+
+    On a multi-device farm this is the MESH-level record.  Two H2D views:
+
+    * `bytes_h2d` — UNIQUE bytes read out of the host-resident G (plus the
+      partitioned per-task vector traffic).  Shared-pass G blocks count
+      once no matter how many devices consume them: the host-RAM read and
+      staging (pad/cast) happen once, which is what the shared reader
+      dedupes — so per-pass `bytes_h2d` is independent of device count.
+    * `bytes_put` — PHYSICAL per-device DMA bytes issued (each device still
+      copies every broadcast block into its own memory, so the G component
+      scales with device count; on real hardware those copies ride
+      parallel per-device DMA engines).  Size bus bandwidth from this one.
+
+    The unmerged per-device views live in `per_device`.
+    """
 
     tile_rows: int = 0
     epochs: int = 0
@@ -219,22 +265,71 @@ class Stage2StreamStats:
     bytes_d2h: int = 0
     epoch_bytes: List[int] = dataclasses.field(default_factory=list)
     active_history: List[int] = dataclasses.field(default_factory=list)
+    # ^ per compaction: active-row union size (single device) / total rows
+    #   streamed per cheap epoch across shards (mesh — unions may overlap)
     seconds: float = 0.0
+    block_dtype: str = "f32"
+    n_devices: int = 1
+    bytes_put: int = 0                # physical per-device DMA bytes
+    put_seconds: float = 0.0          # host time inside H2D puts
+    drain_seconds: float = 0.0        # host time blocked on result fetches
+    prefetch_final: int = 0           # queue depth after autotune
+    per_device: Optional[List["Stage2StreamStats"]] = None
+
+
+def tune_prefetch(h2d_seconds: float, compute_seconds: float, prefetch: int,
+                  cap: int = 8) -> int:
+    """Minimal overlap-autotune (ROADMAP): the in-flight queue hides
+    min(H2D, compute) behind max(H2D, compute) only while it is deep enough
+    to keep both sides busy.  When the measured H2D time of the first full
+    pass exceeds the drain/compute time it is supposed to overlap, transfer
+    lags compute — double the queue depth (bounded by ``cap``)."""
+    if h2d_seconds > compute_seconds and prefetch < cap:
+        return min(cap, max(prefetch * 2, prefetch + 1))
+    return prefetch
+
+
+def prep_block(gb: np.ndarray, tile: int, block_dtype: str) -> np.ndarray:
+    """Pad a host G row-block to ``tile`` rows and cast it to the wire dtype.
+
+    Full-tile blocks already in the wire dtype pass through as views of an
+    (immutable) host buffer — G itself, or an engine's wire-dtype `act_G`
+    gather; any block that needs padding or casting gets a FRESH buffer, so
+    fanned-out blocks stay valid while they sit in per-device queues.
+    """
+    if gb.shape[0] == tile and gb.dtype == BLOCK_DTYPES[block_dtype]:
+        return gb
+    buf = np.zeros((tile, gb.shape[1]), BLOCK_DTYPES[block_dtype])
+    buf[: gb.shape[0]] = gb
+    return buf
+
+
+def iter_shared_blocks(G: np.ndarray, tile: int, block_dtype: str):
+    """The shared host block reader: yield each (tile, B) row-block of G
+    exactly once as ``(sel, cnt, gb_send)`` — the driver fans every yielded
+    buffer out to all live engines, so a full pass reads G once regardless of
+    device count."""
+    n = G.shape[0]
+    for b in range(math.ceil(n / tile)):
+        s, e = b * tile, min((b + 1) * tile, n)
+        yield slice(s, e), e - s, prep_block(G[s:e], tile, block_dtype)
 
 
 class _BlockPipeline:
     """The prefetch-deep in-flight queue (async double buffer, cf.
     `streaming.stream_factor_rows`): results are only fetched to host when
-    the queue is full or the pass ends, so H2D, compute, and D2H overlap."""
+    the queue is full or the pass ends, so H2D, compute, and D2H overlap.
+    ``prefetch`` is mutable — the overlap-autotune loop deepens it when the
+    first full pass measures transfer lagging compute."""
 
-    def __init__(self, prefetch: int, a_g, u_g, q_host, stats):
+    def __init__(self, prefetch: int, a_g, u_g, stats):
         self.inflight = collections.deque()
         self.prefetch = max(1, prefetch)
-        self.a_g, self.u_g, self.q_host = a_g, u_g, q_host
+        self.a_g, self.u_g = a_g, u_g
         self.stats = stats
 
-    def push(self, sel, cnt, items, q_ref):
-        self.inflight.append((sel, cnt, items, q_ref))
+    def push(self, sel, cnt, items):
+        self.inflight.append((sel, cnt, items))
         if len(self.inflight) >= self.prefetch:
             self._drain_one()
 
@@ -243,14 +338,403 @@ class _BlockPipeline:
             self._drain_one()
 
     def _drain_one(self):
-        sel, cnt, items, q_ref = self.inflight.popleft()
-        if q_ref is not None:
-            self.q_host[sel] = np.asarray(q_ref)[:cnt]
-            self.stats.bytes_d2h += cnt * BYTES_F32
+        sel, cnt, items = self.inflight.popleft()
+        t0 = time.perf_counter()
         for t, a_ref, u_ref in items:
             self.a_g[t][sel] = np.asarray(a_ref)[:cnt]
             self.u_g[t][sel] = np.asarray(u_ref)[:cnt]
             self.stats.bytes_d2h += 2 * cnt * BYTES_F32
+        self.stats.drain_seconds += time.perf_counter() - t0
+
+
+def _padded(vec, fill, dtype, tile):
+    if vec.shape[0] == tile:
+        return np.ascontiguousarray(vec, dtype)
+    buf = np.full((tile,), fill, dtype)
+    buf[: vec.shape[0]] = vec
+    return buf
+
+
+class _Stage2Engine:
+    """One device's streamed stage-2 state machine — the reusable per-epoch
+    block pass (row selection, q computation, SMO step, pipeline drain,
+    shrinking compaction) parameterised by (device, task shard, w state).
+
+    The engine owns its shard's host-side global-coordinate task state
+    (y/c/alpha/unchanged), the device-resident per-task w vectors, and the
+    in-flight block pipeline.  A driver (`drive_streamed_engines`) owns the
+    lockstep epoch schedule and feeds shared full-G passes block by block;
+    compacted cheap epochs run engine-locally (`run_cheap_epoch`) over the
+    shard's own active-row union.  Engines never count shared-pass G bytes —
+    the reader stages each block once and accounts for it once — only their
+    task-vector traffic and their own compacted-epoch gathers.
+    """
+
+    def __init__(self, G, tasks: TaskBatch, config: SolverConfig,
+                 cfg: StreamConfig, *, epoch_fn: Callable, device, tile: int):
+        self.G = G
+        self.config, self.cfg = config, cfg
+        self.epoch_fn, self.device, self.tile = epoch_fn, device, tile
+        n, rank = G.shape
+        self.n, self.rank = n, rank
+        self.idx = np.asarray(tasks.idx)
+        self.y_loc = np.asarray(tasks.y, np.float32)
+        self.c_loc = np.asarray(tasks.c, np.float32)
+        self.a0_loc = np.asarray(tasks.alpha0, np.float32)
+        self.T, self.n_pad = self.idx.shape
+        T = self.T
+
+        # Scatter task-local vectors into global row coordinates: rows
+        # outside a task carry c = 0 and are inert, like monolithic padding.
+        self.y_g = np.ones((T, n), np.float32)
+        self.c_g = np.zeros((T, n), np.float32)
+        self.a_g = np.zeros((T, n), np.float32)
+        self.u_g = np.zeros((T, n), np.int32)
+        self.real_loc = self.c_loc > 0.0
+        for t in range(T):
+            r = self.idx[t][self.real_loc[t]]
+            self.y_g[t, r] = self.y_loc[t][self.real_loc[t]]
+            self.c_g[t, r] = self.c_loc[t][self.real_loc[t]]
+            self.a_g[t, r] = np.clip(self.a0_loc[t][self.real_loc[t]], 0.0,
+                                     self.c_loc[t][self.real_loc[t]])
+
+        self.stats = Stage2StreamStats(tile_rows=tile,
+                                       block_dtype=cfg.block_dtype)
+        self.w = [_put(np.zeros((rank,), np.float32), device)
+                  for _ in range(T)]
+        self.pipe = _BlockPipeline(cfg.prefetch, self.a_g, self.u_g,
+                                   self.stats)
+        self.done = np.zeros((T,), bool)
+        self.violation = np.full((T,), np.inf, np.float32)
+        self.epochs_used = np.full((T,), config.max_epochs, np.int32)
+        self.epochs_run = 0
+        self.act: Optional[np.ndarray] = None    # compacted active-row union
+        self.act_G: Optional[np.ndarray] = None  # host gather of G[act]
+        self.blk_active = None                   # per-task block occupancy
+        self.shrink_k = config.shrink_k if config.shrink else 1 << 30
+        self._bf16 = cfg.block_dtype == "bf16"
+        self._warm = [t for t in range(T) if self.a_g[t].any()]
+        self._epoch = -1
+        self._epoch_mark = 0
+        self._put_mark = self._drain_mark = 0.0
+        self._kind = None
+        self._live: List[int] = []
+        self._viol = {}
+
+    # ------------------------------------------------------------ scheduling
+    @property
+    def needs_init(self) -> bool:
+        """Warm starts need w0 = (alpha0 * y) @ G before the first update."""
+        return bool(self._warm)
+
+    @property
+    def all_done(self) -> bool:
+        return bool(self.done.all())
+
+    def start_epoch(self, epoch: int) -> None:
+        self._epoch = epoch
+        self._epoch_mark = self.stats.bytes_h2d
+
+    def finish_epoch(self, epoch: int) -> None:
+        self.epochs_run = epoch + 1
+        self.stats.epoch_bytes.append(self.stats.bytes_h2d - self._epoch_mark)
+
+    def autotune(self, cap: int) -> None:
+        """Close the overlap loop from the FIRST full pass's measured rates:
+        deepen the in-flight queue when transfer lagged compute.  The byte
+        model still binds: the tuned depth may not push the in-flight device
+        working set past `device_budget_bytes` (a deeper queue only helps
+        when there is memory to hold it), so `cap` is tightened to the
+        largest depth that fits before `tune_prefetch` runs."""
+        free = (self.cfg.device_budget_bytes
+                - stage2_resident_bytes(self.rank, self.T))
+        per_block = stage2_block_bytes(self.tile, self.rank, self.T)
+        fit = free // per_block if per_block > 0 else cap
+        cap = max(self.pipe.prefetch, min(cap, int(fit)))
+        put = self.stats.put_seconds - self._put_mark
+        drain = self.stats.drain_seconds - self._drain_mark
+        self.pipe.prefetch = tune_prefetch(put, drain, self.pipe.prefetch,
+                                           cap)
+
+    # ---------------------------------------------------------- shared passes
+    def begin_pass(self, kind: str) -> None:
+        """``kind``: "init" (warm-start w accumulation), "full" (violation-
+        collecting epoch), or "cheap" (uncompacted non-full epoch)."""
+        self._kind = kind
+        if kind == "init":
+            self._live = list(self._warm)
+        else:
+            self._live = [t for t in range(self.T) if not self.done[t]]
+        self._viol = {t: [] for t in self._live}
+        self._put_mark = self.stats.put_seconds
+        self._drain_mark = self.stats.drain_seconds
+
+    def _put_block(self, gb_send):
+        t0 = time.perf_counter()
+        gb = _put(gb_send, self.device)
+        self.stats.put_seconds += time.perf_counter() - t0
+        self.stats.bytes_put += gb_send.nbytes
+        return _upcast32(gb) if self._bf16 else gb
+
+    def _put_vec(self, vec, fill, dtype):
+        t0 = time.perf_counter()
+        b = _put(_padded(vec, fill, dtype, self.tile), self.device)
+        self.stats.put_seconds += time.perf_counter() - t0
+        self.stats.bytes_h2d += b.nbytes
+        self.stats.bytes_put += b.nbytes
+        return b
+
+    def feed_block(self, sel, cnt, gb_send) -> None:
+        """Process one shared-pass block handed over by the driver's reader.
+        The G bytes were staged (and accounted) once by the reader; only this
+        engine's task-vector traffic is counted here."""
+        gb = self._put_block(gb_send)
+        if self._kind == "init":
+            for t in self._live:
+                ab = self._put_vec(self.a_g[t][sel], 0.0, np.float32)
+                yb = self._put_vec(self.y_g[t][sel], 1.0, np.float32)
+                self.w[t] = _accum_w(self.w[t], gb, ab, yb)
+                self.stats.kernel_calls += 1
+            return
+        self._run_block(gb, sel, cnt, full=(self._kind == "full"),
+                        blk=None)
+
+    def _run_block(self, gb, sel, cnt, *, full: bool, blk) -> None:
+        qb = _row_sq(gb)
+        items = []
+        for t in self._live:
+            if blk is not None and not self.blk_active[t][blk]:
+                continue
+            ab = self._put_vec(self.a_g[t][sel], 0.0, np.float32)
+            yb = self._put_vec(self.y_g[t][sel], 1.0, np.float32)
+            cb = self._put_vec(self.c_g[t][sel], 0.0, np.float32)
+            ub = self._put_vec(self.u_g[t][sel], 0, np.int32)
+            a2, u2, w2, viol = self.epoch_fn(
+                gb, yb, cb, qb, ab, ub, self.w[t],
+                full_pass=full, shrink_k=self.shrink_k)
+            self.w[t] = w2
+            items.append((t, a2, u2))
+            self.stats.kernel_calls += 1
+            if full:
+                self._viol[t].append(viol)
+        self.pipe.push(sel, cnt, items)
+
+    def end_pass(self) -> None:
+        self.pipe.flush()
+        if self._kind != "full":
+            return
+        self.stats.full_passes += 1
+        for t in self._live:
+            v = max(float(np.asarray(r)) for r in self._viol[t])
+            self.violation[t] = v
+            if v < self.config.tol:
+                self.done[t] = True
+                self.epochs_used[t] = self._epoch + 1
+        # Re-compact: cheap epochs stream only rows active for at least one
+        # unconverged task — shrinking cuts H2D bytes, not just FLOPs.
+        self.act, self.act_G, self.blk_active = None, None, None
+        live2 = [t for t in range(self.T) if not self.done[t]]
+        if self.config.shrink and live2:
+            masks = (self.c_g[live2] > 0.0) & (self.u_g[live2] < self.shrink_k)
+            union = np.where(masks.any(axis=0))[0]
+            self.stats.active_history.append(int(len(union)))
+            if len(union) < self.n:
+                self.act = union
+                # Gather (and, for bf16 wire blocks, cast) ONCE per
+                # compaction — the cheap epochs between full passes then
+                # slice pass-through views instead of re-casting per epoch.
+                # G itself stays f32: a persistent bf16 shadow of the whole
+                # factor would cost +50% of the dominant host allocation.
+                act_G = self.G[union]
+                self.act_G = (act_G.astype(BLOCK_DTYPES["bf16"])
+                              if self._bf16 else act_G)
+                n_blocks = math.ceil(max(len(union), 1) / self.tile)
+                # Block b of a cheap epoch covers GLOBAL rows
+                # act[b*tile:(b+1)*tile]; a task skips it only when none of
+                # those rows are active for it.
+                tile = self.tile
+                self.blk_active = {
+                    t: np.array([m[union[b * tile:(b + 1) * tile]].any()
+                                 for b in range(n_blocks)])
+                    for t, m in zip(live2, masks)
+                }
+
+    # ----------------------------------------------------- compacted epochs
+    def run_cheap_epoch(self) -> None:
+        """One engine-local non-full epoch over the shard's own compacted
+        active-row union (the driver only calls this when `act` is set; an
+        empty union makes the epoch a no-op)."""
+        rows = self.act
+        if rows is None or len(rows) == 0:
+            return
+        self.begin_pass("cheap")
+        tile = self.tile
+        for b in range(math.ceil(len(rows) / tile)):
+            s, e = b * tile, min((b + 1) * tile, len(rows))
+            gb_send = prep_block(self.act_G[s:e], tile, self.cfg.block_dtype)
+            self.stats.bytes_h2d += gb_send.nbytes
+            self.stats.blocks_streamed += 1
+            self.stats.rows_streamed += e - s
+            gb = self._put_block(gb_send)
+            self._run_block(gb, rows[s:e], e - s, full=False, blk=b)
+        self.pipe.flush()
+
+    # -------------------------------------------------------------- results
+    def result(self):
+        """Assemble this shard's `SolveResult` (host numpy, same layout as
+        `solve_batch`) and its per-device stats record."""
+        W = (np.stack([np.asarray(wt) for wt in self.w]) if self.T
+             else np.zeros((0, self.rank), np.float32))
+        self.stats.bytes_d2h += W.nbytes
+        alpha = np.zeros_like(self.a0_loc)
+        for t in range(self.T):
+            alpha[t][self.real_loc[t]] = \
+                self.a_g[t][self.idx[t][self.real_loc[t]]]
+        dual = self.a_g.sum(axis=1) - 0.5 * (W * W).sum(axis=1)
+        n_sv = (alpha > 0.0).sum(axis=1).astype(np.int32)
+        self.stats.epochs = self.epochs_run
+        self.stats.prefetch_final = self.pipe.prefetch
+        res = SolveResult(alpha=alpha, w=W.astype(np.float32),
+                          epochs=self.epochs_used, violation=self.violation,
+                          dual_obj=dual.astype(np.float32), n_sv=n_sv)
+        return res, self.stats
+
+
+class _InlineFanout:
+    """Single-engine degenerate of the per-device worker fan-out: feed blocks
+    on the calling thread (zero overhead at one device)."""
+
+    def submit(self, engine, fn):
+        fn()
+
+    def barrier(self):
+        pass
+
+    def close(self):
+        pass
+
+
+def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
+                           SolverConfig, cfg: StreamConfig, *, tile: int,
+                           fanout=None) -> Stage2StreamStats:
+    """Lockstep epoch driver over one or more engines.
+
+    Reads each (tile, B) block of G ONCE per shared pass (warm-start init,
+    full epochs, and uncompacted cheap epochs) and fans it out to every live
+    engine via ``fanout`` (inline for one engine, per-device host workers for
+    the overlapped farm), so per-pass G traffic is independent of device
+    count.  Compacted cheap epochs run engine-locally and concurrently.
+    Returns the shared-reader stats record (G-block traffic + epoch/pass
+    counters); per-engine records accumulate task-vector traffic.
+    """
+    fan = fanout or _InlineFanout()
+    reader = Stage2StreamStats(tile_rows=tile, block_dtype=cfg.block_dtype)
+
+    def shared_pass(group, kind):
+        g0 = reader.bytes_h2d
+        for e in group:
+            e.begin_pass(kind)
+        for sel, cnt, gb in iter_shared_blocks(G, tile, cfg.block_dtype):
+            reader.bytes_h2d += gb.nbytes
+            reader.blocks_streamed += 1
+            reader.rows_streamed += cnt
+            for e in group:
+                fan.submit(e, partial(e.feed_block, sel, cnt, gb))
+        for e in group:
+            fan.submit(e, e.end_pass)
+        fan.barrier()
+        return reader.bytes_h2d - g0
+
+    try:
+        init = [e for e in engines if e.needs_init]
+        if init:
+            shared_pass(init, "init")   # init traffic counts, but no epoch
+
+        period = config.full_pass_period if config.shrink else 1
+        tuned = not cfg.autotune_prefetch
+        for epoch in range(config.max_epochs):
+            live = [e for e in engines if not e.all_done]
+            if not live:
+                break
+            for e in live:
+                e.start_epoch(epoch)
+            full = (epoch % period == 0) or not config.shrink
+            if full:
+                reader.epoch_bytes.append(shared_pass(live, "full"))
+                reader.full_passes += 1
+                if not tuned:
+                    tuned = True
+                    for e in live:
+                        e.autotune(cfg.prefetch_cap)
+            else:
+                # Engines WITH a compacted union stream their own gathered
+                # rows; the rest (nothing shrunk yet) share one G read.
+                own = [e for e in live if e.act is not None]
+                shared = [e for e in live if e.act is None]
+                for e in own:
+                    fan.submit(e, e.run_cheap_epoch)
+                if shared:
+                    reader.epoch_bytes.append(shared_pass(shared, "cheap"))
+                else:
+                    fan.barrier()
+                    reader.epoch_bytes.append(0)
+            for e in live:
+                e.finish_epoch(epoch)
+    finally:
+        fan.close()
+    return reader
+
+
+def _elementwise_sum(lists: Sequence[Sequence[int]]) -> List[int]:
+    out: List[int] = []
+    for li in lists:
+        for i, v in enumerate(li):
+            if i < len(out):
+                out[i] += v
+            else:
+                out.append(v)
+    return out
+
+
+def merge_stream_stats(reader: Stage2StreamStats,
+                       per_dev: Sequence[Stage2StreamStats], *,
+                       seconds: float, n_devices: int) -> Stage2StreamStats:
+    """Aggregate the shared-reader record and the per-device engine records
+    into the mesh-level `Stage2StreamStats`.  G blocks staged by the shared
+    reader are counted ONCE in `bytes_h2d` (that is the point: per-pass
+    unique G traffic does not scale with device count); task-vector traffic
+    and compacted-epoch gathers sum over devices because they are
+    partitioned, not replicated; `bytes_put` sums every device's physical
+    DMA copies (== `bytes_h2d` at one device, G component ~D x beyond)."""
+    out = Stage2StreamStats(tile_rows=reader.tile_rows,
+                            block_dtype=reader.block_dtype,
+                            n_devices=n_devices)
+    out.bytes_h2d = reader.bytes_h2d
+    out.blocks_streamed = reader.blocks_streamed
+    out.rows_streamed = reader.rows_streamed
+    for s in per_dev:
+        out.bytes_h2d += s.bytes_h2d
+        out.bytes_put += s.bytes_put
+        out.bytes_d2h += s.bytes_d2h
+        out.blocks_streamed += s.blocks_streamed
+        out.rows_streamed += s.rows_streamed
+        out.kernel_calls += s.kernel_calls
+        out.put_seconds += s.put_seconds
+        out.drain_seconds += s.drain_seconds
+    out.epochs = max((s.epochs for s in per_dev), default=0)
+    out.full_passes = max((s.full_passes for s in per_dev),
+                          default=reader.full_passes)
+    out.epoch_bytes = _elementwise_sum([reader.epoch_bytes]
+                                       + [s.epoch_bytes for s in per_dev])
+    # Shard unions can OVERLAP in rows (one class's rows are active in every
+    # pair that references it, across shards), so this sum is the total rows
+    # each cheap epoch streams farm-wide — an upper bound on the true union
+    # that may exceed n; per-shard unions live in `per_device`.
+    out.active_history = _elementwise_sum([s.active_history for s in per_dev])
+    out.prefetch_final = max((s.prefetch_final for s in per_dev), default=0)
+    out.seconds = seconds
+    out.per_device = list(per_dev) if n_devices > 1 else None
+    return out
 
 
 def solve_batch_streamed(
@@ -269,189 +753,50 @@ def solve_batch_streamed(
     kernel contract) with per-task w chained on device; alpha/unchanged live
     on host and are scattered back per block.  Returns a `SolveResult` whose
     fields are host numpy arrays (same shapes/layout as `solve_batch`), plus
-    a `Stage2StreamStats` when ``return_stats=True``.
+    a `Stage2StreamStats` when ``return_stats=True``.  One-engine
+    instantiation of the shared engine/driver; the overlapped multi-device
+    farm lives in `core/distributed.py::solve_tasks_streamed`.
     """
     t_start = time.perf_counter()
     cfg = stream_config or StreamConfig()
     if epoch_fn is None:
         epoch_fn = default_epoch_fn()
-
     G = np.asarray(G, np.float32)
     n, rank = G.shape
-    idx = np.asarray(tasks.idx)
-    y_loc = np.asarray(tasks.y, np.float32)
-    c_loc = np.asarray(tasks.c, np.float32)
-    a0_loc = np.asarray(tasks.alpha0, np.float32)
-    T, n_pad = idx.shape
+    tile = auto_tile_rows(n, rank, tasks.n_tasks, cfg)
+    eng = _Stage2Engine(G, tasks, config, cfg, epoch_fn=epoch_fn,
+                        device=device, tile=tile)
+    reader = drive_streamed_engines([eng], G, config, cfg, tile=tile)
+    res, est = eng.result()
+    if not return_stats:
+        return res
+    stats = merge_stream_stats(reader, [est],
+                               seconds=time.perf_counter() - t_start,
+                               n_devices=1)
+    return res, stats
 
-    tile = auto_tile_rows(n, rank, T, cfg)
-    stats = Stage2StreamStats(tile_rows=tile)
 
-    # Scatter task-local vectors into global row coordinates: rows outside a
-    # task carry c = 0 and are inert, exactly like the monolithic padding.
-    y_g = np.ones((T, n), np.float32)
-    c_g = np.zeros((T, n), np.float32)
-    a_g = np.zeros((T, n), np.float32)
-    u_g = np.zeros((T, n), np.int32)
-    real_loc = c_loc > 0.0
-    for t in range(T):
-        r = idx[t][real_loc[t]]
-        y_g[t, r] = y_loc[t][real_loc[t]]
-        c_g[t, r] = c_loc[t][real_loc[t]]
-        a_g[t, r] = np.clip(a0_loc[t][real_loc[t]], 0.0, c_loc[t][real_loc[t]])
-
-    q_host = np.zeros((n,), np.float32)
-    have_q = False
-    w = [_put(np.zeros((rank,), np.float32), device) for _ in range(T)]
-    pipe = _BlockPipeline(cfg.prefetch, a_g, u_g, q_host, stats)
-
-    period = config.full_pass_period if config.shrink else 1
-    shrink_k = config.shrink_k if config.shrink else 1 << 30
-
-    def _padded(vec, fill, dtype):
-        if vec.shape[0] == tile:
-            return np.ascontiguousarray(vec, dtype)
-        buf = np.full((tile,), fill, dtype)
-        buf[: vec.shape[0]] = vec
-        return buf
-
-    def _pass(rows, live, *, full: bool, compute_q: bool,
-              accumulate_w_only: bool = False, blk_active=None,
-              rows_G=None, rows_q=None):
-        """Stream one epoch (or the warm-start init pass) over `rows`
-        (None = all of G); returns per-task violation refs on full passes.
-        ``rows_G``/``rows_q`` are the once-per-compaction gathers of
-        G[rows]/q[rows], so cheap-epoch blocks slice views instead of
-        re-fancy-indexing the full host G every epoch."""
-        m = n if rows is None else len(rows)
-        n_blocks = math.ceil(m / tile)
-        viol_refs = {t: [] for t in live}
-        h2d_before = stats.bytes_h2d
-        for b in range(n_blocks):
-            s, e = b * tile, min((b + 1) * tile, m)
-            cnt = e - s
-            if rows is None:
-                sel = slice(s, e)
-                gb_host = G[s:e]
-            else:
-                sel = rows[s:e]
-                gb_host = rows_G[s:e] if rows_G is not None else G[sel]
-            if cnt < tile:
-                pad = np.zeros((tile, rank), np.float32)
-                pad[:cnt] = gb_host
-                gb_host = pad
-            gb = _put(gb_host, device)
-            stats.bytes_h2d += gb.nbytes
-            if compute_q:
-                qb = _row_sq(gb)
-                q_ref = qb
-            else:
-                qsrc = (rows_q[s:e] if rows_q is not None and rows is not None
-                        else q_host[sel])
-                qb = _put(_padded(qsrc, 0.0, np.float32), device)
-                q_ref = None
-                stats.bytes_h2d += qb.nbytes
-            items = []
-            for t in live:
-                if blk_active is not None and not blk_active[t][b]:
-                    continue
-                ab = _put(_padded(a_g[t][sel], 0.0, np.float32), device)
-                yb = _put(_padded(y_g[t][sel], 1.0, np.float32), device)
-                stats.bytes_h2d += ab.nbytes + yb.nbytes
-                if accumulate_w_only:
-                    w[t] = _accum_w(w[t], gb, ab, yb)
-                    stats.kernel_calls += 1
-                    continue
-                cb = _put(_padded(c_g[t][sel], 0.0, np.float32), device)
-                ub = _put(_padded(u_g[t][sel], 0, np.int32), device)
-                stats.bytes_h2d += cb.nbytes + ub.nbytes
-                a2, u2, w2, viol = epoch_fn(
-                    gb, yb, cb, qb, ab, ub, w[t],
-                    full_pass=full, shrink_k=shrink_k)
-                w[t] = w2
-                items.append((t, a2, u2))
-                stats.kernel_calls += 1
-                if full:
-                    viol_refs[t].append(viol)
-            pipe.push(sel, cnt, items, q_ref)
-            stats.blocks_streamed += 1
-            stats.rows_streamed += cnt
-        pipe.flush()
-        stats.epoch_bytes.append(stats.bytes_h2d - h2d_before)
-        return viol_refs
-
-    all_tasks = list(range(T))
-    # Warm starts need w0 = (alpha0 * y) @ G before the first coordinate
-    # update, which costs one extra accumulation stream (it also fills q).
-    if a_g.any():
-        warm_live = [t for t in all_tasks if a_g[t].any()]
-        _pass(None, warm_live, full=False, compute_q=True,
-              accumulate_w_only=True)
-        stats.epoch_bytes.pop()      # init pass is not an epoch
-        have_q = True
-
-    done = np.zeros((T,), bool)
-    violation = np.full((T,), np.inf, np.float32)
-    epochs_used = np.full((T,), config.max_epochs, np.int32)
-    act: Optional[np.ndarray] = None          # compacted active-row union
-    act_G = act_q = None                      # host gathers of G[act], q[act]
-    blk_active = None                         # per-task block occupancy
-    epochs_run = 0
-
-    for epoch in range(config.max_epochs):
-        live = [t for t in all_tasks if not done[t]]
-        if not live:
-            break
-        full = (epoch % period == 0) or not config.shrink
-        epochs_run = epoch + 1
-        if full:
-            viol_refs = _pass(None, live, full=True, compute_q=not have_q)
-            have_q = True
-            stats.full_passes += 1
-            for t in live:
-                v = max(float(np.asarray(r)) for r in viol_refs[t])
-                violation[t] = v
-                if v < config.tol:
-                    done[t] = True
-                    epochs_used[t] = epoch + 1
-            # Re-compact: cheap epochs stream only rows active for at least
-            # one unconverged task — shrinking cuts H2D bytes, not just FLOPs.
-            act, act_G, act_q, blk_active = None, None, None, None
-            live2 = [t for t in all_tasks if not done[t]]
-            if config.shrink and live2:
-                masks = (c_g[live2] > 0.0) & (u_g[live2] < shrink_k)
-                union = np.where(masks.any(axis=0))[0]
-                stats.active_history.append(int(len(union)))
-                if len(union) < n:
-                    act = union
-                    act_G, act_q = G[act], q_host[act]
-                    n_blocks = math.ceil(max(len(act), 1) / tile)
-                    # Block b of a cheap epoch covers GLOBAL rows
-                    # act[b*tile:(b+1)*tile]; a task skips it only when none
-                    # of those rows are active for it.
-                    blk_active = {
-                        t: np.array([m[act[b * tile:(b + 1) * tile]].any()
-                                     for b in range(n_blocks)])
-                        for t, m in zip(live2, masks)
-                    }
-        else:
-            if act is not None and len(act) == 0:
-                continue    # everything shrunk: the epoch is a no-op
-            _pass(act, live, full=False, compute_q=False,
-                  blk_active=blk_active, rows_G=act_G, rows_q=act_q)
-
-    stats.epochs = epochs_run
-
-    # ------------------------------------------------------------- results
-    W = np.stack([np.asarray(wt) for wt in w]) if T else np.zeros((0, rank))
-    stats.bytes_d2h += W.nbytes
-    alpha = np.zeros_like(a0_loc)
-    for t in range(T):
-        alpha[t][real_loc[t]] = a_g[t][idx[t][real_loc[t]]]
-    dual = a_g.sum(axis=1) - 0.5 * (W * W).sum(axis=1)
-    n_sv = (alpha > 0.0).sum(axis=1).astype(np.int32)
-    stats.seconds = time.perf_counter() - t_start
-    res = SolveResult(alpha=alpha, w=W.astype(np.float32),
-                      epochs=epochs_used, violation=violation,
-                      dual_obj=dual.astype(np.float32), n_sv=n_sv)
-    return (res, stats) if return_stats else res
+def solve_streamed_auto(
+    G,
+    tasks: TaskBatch,
+    config: SolverConfig = SolverConfig(),
+    *,
+    stream_config: Optional[StreamConfig] = None,
+    return_stats: bool = False,
+):
+    """The streamed stage-2 entry point every routed caller (`LPDSVM.fit`,
+    `core/cv.py`, `solve_polished`'s final level, the CLI) goes through: with
+    more than one local device the multi-device task farm — overlapped
+    behind the shared block reader by default, or serial per-device streams
+    when `StreamConfig.overlap_devices` is off — otherwise the single-device
+    block stream."""
+    cfg = stream_config or StreamConfig()
+    devices = jax.local_devices()
+    if len(devices) > 1 and tasks.n_tasks > 1:
+        from repro.core.distributed import solve_tasks_streamed
+        return solve_tasks_streamed(G, tasks, config, devices=devices,
+                                    stream_config=cfg,
+                                    overlap=cfg.overlap_devices,
+                                    return_stats=return_stats)
+    return solve_batch_streamed(G, tasks, config, stream_config=cfg,
+                                return_stats=return_stats)

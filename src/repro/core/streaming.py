@@ -53,6 +53,14 @@ class StreamConfig:
     prefetch: int = 2                    # chunks in flight (double buffering)
     min_chunk_rows: int = 256
     tile_rows: Optional[int] = None      # stage-2 G block rows (None -> derived)
+    block_dtype: str = "f32"             # wire dtype of streamed stage-2 G
+                                         # blocks: "f32" or "bf16" (half H2D,
+                                         # upcast on device before the epoch)
+    overlap_devices: bool = True         # >1 local device: overlapped task
+                                         # farm behind one shared block reader
+    autotune_prefetch: bool = True       # deepen the in-flight queue when the
+                                         # first full pass is transfer-bound
+    prefetch_cap: int = 8                # autotune ceiling on queue depth
 
     def __post_init__(self):
         if self.prefetch < 1:
@@ -61,6 +69,11 @@ class StreamConfig:
             raise ValueError("chunk_rows must be positive")
         if self.tile_rows is not None and self.tile_rows < 1:
             raise ValueError("tile_rows must be positive")
+        if self.block_dtype not in ("f32", "bf16"):
+            raise ValueError(f"block_dtype must be 'f32' or 'bf16', "
+                             f"got {self.block_dtype!r}")
+        if self.prefetch_cap < 1:
+            raise ValueError("prefetch_cap must be >= 1")
 
 
 def resident_bytes(p: int, budget: int) -> int:

@@ -25,7 +25,7 @@ from repro.core.ovo import build_ovo_tasks, ovo_decision_values, ovo_vote
 from repro.core.polish import (PolishSchedule, PolishTrace, make_schedule,
                                solve_polished)
 from repro.core.solver_stream import (Stage2StreamStats, route_stage2,
-                                      solve_batch_streamed)
+                                      solve_streamed_auto)
 from repro.core.streaming import StreamConfig
 
 
@@ -150,7 +150,8 @@ class LPDSVM:
     def _solve_stage2(self, tasks: TaskBatch) -> SolveResult:
         """Stage-2 dispatch (see `solver_stream.route_stage2`): the polish
         ladder when enabled, the streamed row-block solver when G must stay
-        host-resident, else the jit'd `solve_batch`."""
+        host-resident (overlapped over every local device when there are
+        several — `solve_streamed_auto`), else the jit'd `solve_batch`."""
         G = self.factor.G
         self.stats.stage2_streamed = False      # refits must not report the
         self.stats.stage2_stats = None          # previous fit's stream stats
@@ -170,7 +171,7 @@ class LPDSVM:
         if not route_stage2(self.factor, tasks, self.stream,
                             self.stream_config, self.solve_fn, solve_batch):
             return self.solve_fn(G, tasks, self.config)
-        res, stats = solve_batch_streamed(
+        res, stats = solve_streamed_auto(
             G, tasks, self.config, stream_config=self.stream_config,
             return_stats=True)
         self.stats.stage2_streamed = True

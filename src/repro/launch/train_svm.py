@@ -117,7 +117,9 @@ def _report(svm):
           f"({svm.stats.n_tasks} binary SVMs"
           f"{', streamed' if svm.stats.stage2_streamed else ''})")
     if s2 is not None:
-        print(f"stage2 stream: tile {s2.tile_rows} rows, {s2.epochs} epochs, "
+        print(f"stage2 stream: tile {s2.tile_rows} rows x {s2.block_dtype} "
+              f"blocks, {s2.n_devices} device(s), prefetch "
+              f"{s2.prefetch_final}, {s2.epochs} epochs, "
               f"{s2.bytes_h2d / 2**20:.1f} MiB H2D / "
               f"{s2.bytes_d2h / 2**20:.1f} MiB D2H, "
               f"active {s2.active_history}")
@@ -157,6 +159,14 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="force the out-of-core pipelines (both stages) "
                          "regardless of budget")
+    ap.add_argument("--block-dtype", choices=("f32", "bf16"), default="f32",
+                    help="wire dtype of streamed stage-2 G blocks; bf16 "
+                         "halves the H2D bytes (upcast on device) and, like "
+                         "--tile-rows, forces streaming without a budget")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the overlapped multi-device stage-2 task "
+                         "farm (serial per-device streams; single-device "
+                         "hosts are unaffected)")
     ap.add_argument("--polish", action="store_true",
                     help="coarse-to-fine warm-started stage 2: solve a "
                          "nested subsample ladder (n/16 -> n/4 -> n by "
@@ -178,17 +188,20 @@ def main():
         ap.error(f"--polish-levels must be >= 1, got {args.polish_levels}")
 
     stream_config = None
-    # An explicit chunk/tile size with no budget is a request to stream, not
-    # a hint to the (roomy) default budget; --stream always forces.
-    force = args.stream or ((args.chunk_rows > 0 or args.tile_rows > 0)
-                            and args.device_budget_mb <= 0)
+    # An explicit chunk/tile size or wire dtype with no budget is a request
+    # to stream, not a hint to the (roomy) default budget; --stream forces.
+    bf16 = args.block_dtype != "f32"
+    force = args.stream or ((args.chunk_rows > 0 or args.tile_rows > 0
+                             or bf16) and args.device_budget_mb <= 0)
     if (args.device_budget_mb > 0 or args.chunk_rows > 0
-            or args.tile_rows > 0 or args.stream):
+            or args.tile_rows > 0 or args.stream or bf16 or args.no_overlap):
         from repro.core import StreamConfig
         stream_config = StreamConfig(
             device_budget_bytes=int(args.device_budget_mb * 2**20) or 2 << 30,
             chunk_rows=args.chunk_rows or None,
-            tile_rows=args.tile_rows or None)
+            tile_rows=args.tile_rows or None,
+            block_dtype=args.block_dtype,
+            overlap_devices=not args.no_overlap)
 
     if args.libsvm:
         return train_from_libsvm(args, stream_config)

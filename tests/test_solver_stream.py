@@ -166,6 +166,59 @@ def test_shrinking_cuts_h2d_bytes():
     assert per_epoch_on < per_epoch_off
 
 
+# ------------------------------------------------------------ bf16 blocks
+
+@pytest.mark.parametrize("dataset", ["checker", "spiral"])
+def test_bf16_blocks_parity_tolerance(dataset):
+    """`StreamConfig.block_dtype="bf16"` halves the streamed G bytes (the
+    ROADMAP's bandwidth-doubling epilogue, measured on the wire) while the
+    solution stays within tolerance of the fp32 monolithic solve on the
+    classic RBF stress suites."""
+    from repro.data import make_checker, make_two_spirals
+    if dataset == "checker":
+        x, y = make_checker(500, seed=3)
+        kp = KernelParams("rbf", gamma=8.0)
+    else:
+        x, y = make_two_spirals(500, seed=4)
+        kp = KernelParams("rbf", gamma=16.0)
+    _, labels = np.unique(y, return_inverse=True)
+    fac = compute_factor(jnp.asarray(x, jnp.float32), kp, 128)
+    G = np.asarray(fac.G)
+    n, rank = G.shape
+    tasks, _ = build_ovo_tasks(labels, 2, 8.0)
+    cfg = SolverConfig(tol=1e-2, max_epochs=300)
+    mono = solve_batch(jnp.asarray(G), tasks, cfg)
+    tile = 96
+    _, s32 = solve_batch_streamed(
+        G, tasks, cfg, return_stats=True,
+        stream_config=StreamConfig(tile_rows=tile))
+    res, sbf = solve_batch_streamed(
+        G, tasks, cfg, return_stats=True,
+        stream_config=StreamConfig(tile_rows=tile, block_dtype="bf16"))
+    assert sbf.block_dtype == "bf16"
+    # wire bytes: the G component of the first full pass halves exactly
+    import math
+    g32 = math.ceil(n / tile) * tile * rank * 4
+    assert s32.epoch_bytes[0] - sbf.epoch_bytes[0] == g32 // 2
+    # solution tolerance: weights, box feasibility, decisions, objective
+    w_m = np.asarray(mono.w)
+    assert np.max(np.abs(res.w - w_m)) <= 0.05 * np.max(np.abs(w_m))
+    assert (res.alpha >= 0).all()
+    assert (res.alpha <= np.asarray(tasks.c) + 1e-6).all()
+    dec_m = G @ w_m.T
+    dec_b = G @ res.w.T
+    pred_m = (dec_m[:, 0] <= 0)
+    pred_b = (dec_b[:, 0] <= 0)
+    assert np.mean(pred_m != pred_b) <= 0.01
+    err_m = np.mean(pred_m != (labels == 1))
+    err_b = np.mean(pred_b != (labels == 1))
+    assert abs(err_b - err_m) <= 0.02
+    np.testing.assert_allclose(res.dual_obj, np.asarray(mono.dual_obj),
+                               rtol=5e-3)
+    # bf16 still converges below tol
+    assert (res.violation < cfg.tol).all()
+
+
 # ------------------------------------------------------------- budget model
 
 def test_stage2_memory_model_accounting():
