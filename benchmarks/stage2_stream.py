@@ -36,6 +36,9 @@ SMOKE = bool(os.environ.get("BENCH_SMOKE"))
 SIZES = (((600, 96, 3),) if SMOKE
          else ((2_000, 128, 3), (5_000, 192, 3)))
 TILES = ((128,) if SMOKE else (512, 1_536))
+# Wire dtype axis: int8 rides in the smoke set too, so CI exercises the
+# quantised path on every run.
+DTYPES = (("f32", "int8") if SMOKE else ("f32", "bf16", "int8"))
 CONFIG = SolverConfig(tol=1e-2, max_epochs=200 if SMOKE else 400)
 
 
@@ -63,46 +66,63 @@ def run() -> None:
         emit(f"stage2_mono_n{n}_B{rank}", t * 1e6, f"{visits / t:.0f} visits/s")
         records.append({"mode": "monolithic", "n": n, "rank": rank,
                         "n_tasks": tasks.n_tasks, "tile_rows": n,
+                        "dtype": "f32",
                         "seconds": t, "visits_per_s": visits / t,
                         "bytes_h2d": G.nbytes, "epoch_bytes": None})
 
         for tile in TILES:
             if tile >= n:
                 continue
-            cfg = StreamConfig(tile_rows=tile)
-            holder = {}
+            pass0 = None                       # f32 first-full-pass bytes
+            for dtype in DTYPES:
+                cfg = StreamConfig(tile_rows=tile, block_dtype=dtype)
+                holder = {}
 
-            def streamed():
-                holder["st"] = solve_batch_streamed(
-                    G, tasks, CONFIG, stream_config=cfg,
-                    return_stats=True)[1]
+                def streamed():
+                    holder["st"] = solve_batch_streamed(
+                        G, tasks, CONFIG, stream_config=cfg,
+                        return_stats=True)[1]
 
-            # warmup (jit compile) + ONE timed run whose stats we keep — a
-            # full solve is already minutes of dispatch at these sizes
-            t = timeit(streamed, repeats=1)
-            st = holder["st"]
-            # every kernel call sweeps one (tile,) block for one task, so
-            # this matches the monolithic epochs.sum() * n visit count
-            # (modulo tail-block padding)
-            visits = st.kernel_calls * st.tile_rows
-            emit(f"stage2_stream_n{n}_B{rank}_t{tile}", t * 1e6,
-                 f"{visits / t:.0f} visits/s "
-                 f"{st.bytes_h2d / 2**20:.1f}MiB h2d")
-            records.append({"mode": "streamed", "n": n, "rank": rank,
-                            "n_tasks": tasks.n_tasks, "tile_rows": tile,
-                            "seconds": t, "visits_per_s": visits / t,
-                            "bytes_h2d": st.bytes_h2d,
-                            "bytes_d2h": st.bytes_d2h,
-                            "epochs": st.epochs,
-                            "full_passes": st.full_passes,
-                            "epoch_bytes": st.epoch_bytes,
-                            "active_history": st.active_history})
-            # shrinking must turn into bandwidth savings: compare the first
-            # (uncompacted) epoch's H2D bytes with the cheapest later epoch
-            if st.epoch_bytes:
-                first, floor = st.epoch_bytes[0], min(st.epoch_bytes)
-                emit(f"stage2_shrink_bytes_n{n}_t{tile}", 0.0,
-                     f"{first / max(floor, 1):.1f}x epoch-byte reduction")
+                # warmup (jit compile) + ONE timed run whose stats we keep —
+                # a full solve is already minutes of dispatch at these sizes
+                t = timeit(streamed, repeats=1)
+                st = holder["st"]
+                # every kernel call sweeps one (tile,) block for one task, so
+                # this matches the monolithic epochs.sum() * n visit count
+                # (modulo tail-block padding)
+                visits = st.kernel_calls * st.tile_rows
+                # effective host->device throughput: physical DMA bytes over
+                # the host time spent inside puts (the quantised wire's
+                # point: same rows, fewer bytes, higher effective rows/s)
+                gbps = st.bytes_put / max(st.put_seconds, 1e-9) / 1e9
+                emit(f"stage2_stream_n{n}_B{rank}_t{tile}_{dtype}", t * 1e6,
+                     f"{visits / t:.0f} visits/s "
+                     f"{st.bytes_h2d / 2**20:.1f}MiB h2d {gbps:.2f}GB/s")
+                records.append({"mode": "streamed", "n": n, "rank": rank,
+                                "n_tasks": tasks.n_tasks, "tile_rows": tile,
+                                "dtype": dtype,
+                                "seconds": t, "visits_per_s": visits / t,
+                                "bytes_h2d": st.bytes_h2d,
+                                "bytes_scales": st.bytes_scales,
+                                "bytes_d2h": st.bytes_d2h,
+                                "h2d_gbps": gbps,
+                                "epochs": st.epochs,
+                                "full_passes": st.full_passes,
+                                "epoch_bytes": st.epoch_bytes,
+                                "active_history": st.active_history})
+                # shrinking must turn into bandwidth savings: compare the
+                # first (uncompacted) epoch's H2D bytes with the cheapest
+                # later epoch
+                if st.epoch_bytes:
+                    first, floor = st.epoch_bytes[0], min(st.epoch_bytes)
+                    emit(f"stage2_shrink_bytes_n{n}_t{tile}_{dtype}", 0.0,
+                         f"{first / max(floor, 1):.1f}x epoch-byte reduction")
+                    if dtype == "f32":
+                        pass0 = first
+                    elif pass0 is not None:
+                        emit(f"stage2_wire_bytes_n{n}_t{tile}_{dtype}", 0.0,
+                             f"{pass0 / max(first, 1):.2f}x per-pass byte "
+                             f"reduction vs f32")
 
     payload = {"benchmark": "stage2_streaming",
                "backend": jax.default_backend(),

@@ -24,7 +24,7 @@ from benchmarks.common import emit, timeit
 from repro.core import KernelParams, StreamConfig, auto_chunk_rows
 from repro.core.kernel_fn import gram
 from repro.core.nystrom import _eig_projector, select_landmarks
-from repro.core.streaming import stream_factor_rows
+from repro.core.streaming import Stage1StreamStats, stream_factor_rows
 from repro.data import make_checker
 
 OUT_PATH = os.environ.get("BENCH_STREAMING_JSON", "BENCH_streaming.json")
@@ -40,6 +40,9 @@ if _N:
     SIZES = ((_N, int(os.environ.get("BENCH_STREAMING_BUDGET", "256"))),)
 CHUNKS = (512,) if SMOKE else (1_024, 4_096)
 PREFETCH = (2,) if SMOKE else (1, 2)
+# Wire dtype axis (the int8 rows ride in the smoke set too, so CI exercises
+# the quantised chunk path on every run).
+DTYPES = ("f32", "int8")
 
 
 def _stage1_inputs(n: int, budget: int, gamma: float = 8.0):
@@ -62,25 +65,47 @@ def run() -> None:
         t = timeit(mono)
         emit(f"stage1_mono_n{n}_B{budget}", t * 1e6, f"{n / t:.0f} rows/s")
         records.append({"mode": "monolithic", "n": n, "budget": budget,
-                        "chunk_rows": n, "prefetch": 1,
+                        "chunk_rows": n, "prefetch": 1, "dtype": "f32",
                         "seconds": t, "rows_per_s": n / t})
 
         for chunk in CHUNKS:
             if chunk >= n:
                 continue
             for pf in PREFETCH:
-                out = np.empty((n, projector.shape[1]), np.float32)
+                wire0 = None                   # f32 chunk wire bytes
+                for dtype in DTYPES:
+                    out = np.empty((n, projector.shape[1]), np.float32)
+                    holder = {}
 
-                def chunked():
-                    stream_factor_rows(x_np, lm, projector, kp,
-                                       chunk_rows=chunk, prefetch=pf, out=out)
+                    def chunked():
+                        st = Stage1StreamStats()
+                        stream_factor_rows(x_np, lm, projector, kp,
+                                           chunk_rows=chunk, prefetch=pf,
+                                           out=out, wire_dtype=dtype,
+                                           stats=st)
+                        holder["st"] = st
 
-                t = timeit(chunked)
-                emit(f"stage1_stream_n{n}_B{budget}_c{chunk}_pf{pf}",
-                     t * 1e6, f"{n / t:.0f} rows/s")
-                records.append({"mode": "streamed", "n": n, "budget": budget,
-                                "chunk_rows": chunk, "prefetch": pf,
-                                "seconds": t, "rows_per_s": n / t})
+                    t = timeit(chunked)
+                    st = holder["st"]
+                    gbps = st.bytes_h2d / max(st.put_seconds, 1e-9) / 1e9
+                    emit(f"stage1_stream_n{n}_B{budget}_c{chunk}_pf{pf}"
+                         f"_{dtype}", t * 1e6,
+                         f"{n / t:.0f} rows/s "
+                         f"{st.bytes_h2d / 2**20:.2f}MiB h2d {gbps:.2f}GB/s")
+                    records.append({"mode": "streamed", "n": n,
+                                    "budget": budget, "chunk_rows": chunk,
+                                    "prefetch": pf, "dtype": dtype,
+                                    "seconds": t, "rows_per_s": n / t,
+                                    "bytes_h2d": st.bytes_h2d,
+                                    "bytes_scales": st.bytes_scales,
+                                    "h2d_gbps": gbps})
+                    if dtype == "f32":
+                        wire0 = st.bytes_h2d
+                    elif wire0 is not None:
+                        emit(f"stage1_wire_bytes_n{n}_c{chunk}_pf{pf}"
+                             f"_{dtype}", 0.0,
+                             f"{wire0 / max(st.bytes_h2d, 1):.2f}x chunk "
+                             f"byte reduction vs f32")
 
         # what the auto-router would pick at the default 2 GiB budget
         auto = auto_chunk_rows(n, x_np.shape[1], budget, StreamConfig())

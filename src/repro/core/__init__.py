@@ -6,19 +6,24 @@ from repro.core.dual_solver import (SolverConfig, TaskBatch, SolveResult,
 from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
 from repro.core.polish import (PolishSchedule, PolishTrace, make_schedule,
                                solve_polished)
+from repro.core.quant import (GROUP_ROWS, QuantBlock, dequant_rows,
+                              dequantize_rows, quant_bytes, quantize_block,
+                              quantize_rows)
 from repro.core.solver_stream import (Stage2StreamStats, auto_tile_rows,
                                       should_stream_stage2,
                                       solve_batch_streamed,
-                                      solve_streamed_auto, tune_prefetch)
+                                      solve_streamed_auto, tune_prefetch,
+                                      wire_group)
 from repro.core.svm import LPDSVM
 from repro.core.cv import grid_search, cross_validate, kfold_masks
 from repro.core.distributed import (balance_task_split, solve_tasks_sharded,
                                     solve_tasks_streamed,
                                     solve_tasks_streamed_mesh,
                                     stream_factor_over_mesh)
-from repro.core.streaming import (StreamConfig, auto_chunk_rows,
-                                  compute_factor_streamed,
-                                  compute_factor_streamed_csr, should_stream,
+from repro.core.streaming import (Stage1StreamStats, StreamConfig,
+                                  auto_chunk_rows, compute_factor_streamed,
+                                  compute_factor_streamed_csr,
+                                  default_gram_q8_fn, should_stream,
                                   stream_factor_blocks, stream_factor_rows)
 
 __all__ = [
@@ -27,12 +32,16 @@ __all__ = [
     "SolverConfig", "TaskBatch", "SolveResult", "solve_one", "solve_batch",
     "duality_gap", "build_ovo_tasks", "class_pairs", "ovo_vote",
     "PolishSchedule", "PolishTrace", "make_schedule", "solve_polished",
+    "GROUP_ROWS", "QuantBlock", "dequant_rows", "dequantize_rows",
+    "quant_bytes", "quantize_block", "quantize_rows",
     "Stage2StreamStats", "auto_tile_rows", "should_stream_stage2",
     "solve_batch_streamed", "solve_streamed_auto", "tune_prefetch",
+    "wire_group",
     "LPDSVM", "grid_search", "cross_validate", "kfold_masks",
     "balance_task_split", "solve_tasks_sharded", "solve_tasks_streamed",
     "solve_tasks_streamed_mesh", "stream_factor_over_mesh",
-    "StreamConfig", "auto_chunk_rows", "compute_factor_streamed",
-    "compute_factor_streamed_csr", "should_stream", "stream_factor_blocks",
+    "Stage1StreamStats", "StreamConfig", "auto_chunk_rows",
+    "compute_factor_streamed", "compute_factor_streamed_csr",
+    "default_gram_q8_fn", "should_stream", "stream_factor_blocks",
     "stream_factor_rows",
 ]

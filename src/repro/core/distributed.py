@@ -263,8 +263,12 @@ def solve_tasks_streamed(
     # One tile for ALL engines (the shared reader stages each block once);
     # sized by the fattest shard so every device's in-flight set fits.
     tile = auto_tile_rows(n, rank, max(len(p) for p in parts), cfg)
+    # One int8 scale-table cache for the whole farm: every engine streams
+    # the same G, so the global group scales are computed once, not once
+    # per device.
+    scale_cache: dict = {}
     engines = [_Stage2Engine(G, sub, config, cfg, epoch_fn=epoch_fn,
-                             device=d, tile=tile)
+                             device=d, tile=tile, scale_cache=scale_cache)
                for d, sub in zip(devices, subs)]
     workers = _DeviceWorkers(engines, depth=max(2, cfg.prefetch))
     reader = drive_streamed_engines(engines, G, config, cfg, tile=tile,

@@ -46,6 +46,9 @@ class LowRankFactor:
     kernel: KernelParams
     streamed: bool = False        # True -> G is a host-resident numpy buffer
                                   # produced by the out-of-core chunked path
+    stage1_stats: Optional[object] = None
+                                  # streaming.Stage1StreamStats of the build
+                                  # (chunk wire bytes / dtype / autotune)
 
     @property
     def n(self) -> int:

@@ -1,0 +1,184 @@
+"""int8 per-row-group wire codec for the streamed pipelines.
+
+Both streamed stages are H2D-bandwidth-bound (BENCH_streaming.json,
+BENCH_stage2_mesh.json record the curves), which makes bytes-per-element the
+single biggest lever on the hot path: an int8 wire format moves ~4x fewer
+bytes across PCIe than f32 for the same rows.  This module is the shared
+codec:
+
+  * **Host side** (`quantize_rows`): rows are split into groups of
+    ``group`` consecutive rows; each group gets one affine (scale, zero)
+    pair from its min/max so that q = round((x - zero)/scale) fits int8
+    with NO clipping loss (zero is the range midpoint, scale spans 254
+    steps).  The per-group max quantisation error is (max-min)/508.
+    ``symmetric=True`` pins zero = 0 (scale = absmax/127) — required when
+    downstream zero-PADDING of the quantised values must dequantise to
+    exact zeros (the Pallas gram kernel pads the feature axis).
+  * **Device side** (`dequant_rows` / its jnp twin in consumers): the
+    (ng, 2) scale table is expanded to per-row (scale, zero) and applied in
+    fp32 — fused into the consuming kernel (the Pallas gram epilogue, the
+    streamed SMO block prep) instead of a separate materialised upcast.
+
+Wire cost per n-row block of width B:
+
+    values  n * B           bytes   (int8)
+    scales  ceil(n/group) * 8 bytes (f32 scale + zero per group)
+
+so the f32 -> int8 ratio is 4 / (1 + 8/(group*B)) — ~3.99x at the default
+group of 32 and B >= 64, comfortably above the >= 3x acceptance bar with
+the scale bytes counted.
+
+A constant group (max == min) quantises EXACTLY: scale falls back to 1.0,
+every q is 0, and dequantisation returns the midpoint — so all-zero padding
+groups round-trip bit-exactly in both codec modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Default rows per scale group.  32 is the int8 sublane tile on TPU (a
+# (32, 128) native tile), keeps the scale overhead at 8/(32*B) of the
+# payload, and divides every MXU-aligned row tile.
+GROUP_ROWS = 32
+SCALE_FIELDS = 2          # (scale, zero) per group, both f32
+BYTES_SCALE = SCALE_FIELDS * 4
+
+
+def n_groups(rows: int, group: int = GROUP_ROWS) -> int:
+    return -(-rows // group)
+
+
+def quant_bytes(rows: int, cols: int, group: int = GROUP_ROWS) -> int:
+    """Total wire bytes of one quantised (rows, cols) block, scales included."""
+    return rows * cols + n_groups(rows, group) * BYTES_SCALE
+
+
+def quant_scale_bytes(rows: int, group: int = GROUP_ROWS) -> int:
+    """Just the scale-table bytes of one quantised block."""
+    return n_groups(rows, group) * BYTES_SCALE
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantBlock:
+    """One quantised wire block: int8 values + the (ng, 2) f32 scale table.
+
+    Mimics the ndarray surface the streaming byte accounting relies on
+    (`nbytes`, `shape`), so f32/bf16 ndarrays and QuantBlocks flow through
+    the same reader/fan-out plumbing.
+    """
+
+    values: np.ndarray            # (rows, cols) int8
+    scales: np.ndarray            # (ng, 2) f32: [:, 0] scale, [:, 1] zero
+    group: int = GROUP_ROWS
+
+    @property
+    def nbytes(self) -> int:
+        return self.values.nbytes + self.scales.nbytes
+
+    @property
+    def scale_bytes(self) -> int:
+        return self.scales.nbytes
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+
+def group_scales(x: np.ndarray, group: int = GROUP_ROWS, *,
+                 symmetric: bool = False) -> np.ndarray:
+    """Per-row-group (scale, zero) table of a (n, p) f32 block: (ng, 2) f32.
+
+    Affine mode (default): scale = (max-min)/254, zero = midpoint, so
+    q in [-127, 127] exactly — no clipping loss.  Symmetric mode: zero = 0,
+    scale = absmax/127, so zero VALUES (and zero padding added after
+    quantisation) are represented exactly.  Degenerate (constant) groups get
+    scale 1.0: q ends up 0 and dequant returns the midpoint / zero exactly.
+    """
+    x = np.ascontiguousarray(x, np.float32)
+    n = x.shape[0]
+    if n == 0:
+        return np.zeros((0, SCALE_FIELDS), np.float32)
+    ng = n_groups(n, group)
+    starts = np.arange(0, n, group)
+    mn = np.minimum.reduceat(x.min(axis=1), starts)
+    mx = np.maximum.reduceat(x.max(axis=1), starts)
+    if symmetric:
+        scale = np.maximum(np.abs(mn), np.abs(mx)) / 127.0
+        zero = np.zeros((ng,), np.float32)
+    else:
+        scale = (mx - mn) / 254.0
+        zero = (0.5 * (mx + mn)).astype(np.float32)
+    scale = np.where(scale > 0.0, scale, 1.0).astype(np.float32)
+    return np.stack([scale, zero], axis=1).astype(np.float32)
+
+
+def expand_scales(scales: np.ndarray, group: int, n: int) -> np.ndarray:
+    """(ng, 2) group table -> (n, 2) per-row table."""
+    return np.repeat(scales, group, axis=0)[:n]
+
+
+def encode_rows(x: np.ndarray, row_scales: np.ndarray) -> np.ndarray:
+    """int8 codes of (n, p) f32 rows under a PER-ROW (n, 2) scale table.
+
+    The encode half of the codec, factored out so consumers that need
+    row-permuted encodings (the streamed solver's shrinking compaction
+    gathers rows out of group order) can reuse each row's GLOBAL group
+    scale — the decoded value of a row is then identical no matter which
+    block shape it travelled in.
+    """
+    q = np.rint((x - row_scales[:, 1:2]) / row_scales[:, 0:1])
+    return np.clip(q, -127, 127).astype(np.int8)
+
+
+def quantize_rows(x: np.ndarray, group: int = GROUP_ROWS, *,
+                  symmetric: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+    """Quantise a (n, p) f32 block to (int8 values, (ng, 2) f32 scales)."""
+    x = np.ascontiguousarray(x, np.float32)
+    scales = group_scales(x, group, symmetric=symmetric)
+    if x.shape[0] == 0:
+        return np.zeros((0, x.shape[1]), np.int8), scales
+    return encode_rows(x, expand_scales(scales, group, x.shape[0])), scales
+
+
+def quantize_block(x: np.ndarray, group: int = GROUP_ROWS, *,
+                   symmetric: bool = False) -> QuantBlock:
+    v, s = quantize_rows(x, group, symmetric=symmetric)
+    return QuantBlock(values=v, scales=s, group=group)
+
+
+def dequantize_rows(values: np.ndarray, scales: np.ndarray,
+                    group: int = GROUP_ROWS) -> np.ndarray:
+    """Host (numpy) dequantisation — the codec oracle for tests/tools."""
+    n = values.shape[0]
+    s = np.repeat(scales[:, 0], group)[:n, None]
+    z = np.repeat(scales[:, 1], group)[:n, None]
+    return values.astype(np.float32) * s + z
+
+
+@partial(jax.jit, static_argnames=("group",))
+def dequant_rows(values: jnp.ndarray, scales: jnp.ndarray,
+                 group: int = GROUP_ROWS) -> jnp.ndarray:
+    """Device dequantisation of an int8 wire block back to fp32.
+
+    The jit'd consumer-side half of the codec: expands the compact (ng, 2)
+    scale table to per-row (scale, zero) and applies them in one fused
+    elementwise pass — the H2D copy moved a quarter of the bytes, and no
+    separate f32 staging buffer ever exists on host.
+    """
+    n = values.shape[0]
+    ng = scales.shape[0]
+    s = jnp.repeat(scales[:, 0], group, total_repeat_length=ng * group)[:n]
+    z = jnp.repeat(scales[:, 1], group, total_repeat_length=ng * group)[:n]
+    return values.astype(jnp.float32) * s[:, None] + z[:, None]
+
+
+def max_quant_error(scales: np.ndarray) -> float:
+    """Worst-case absolute reconstruction error promised by a scale table."""
+    return float(0.5 * scales[:, 0].max()) if scales.size else 0.0

@@ -30,9 +30,11 @@ many engines behind per-device host workers so H2D, compute, and D2H overlap
 ACROSS devices and the host-resident G is streamed once per pass instead of
 once per device.  Blocks can optionally cross the bus as bfloat16
 (`StreamConfig.block_dtype="bf16"`, upcast on device) for half the stage-2
-H2D bytes, and `tune_prefetch` closes a minimal overlap-autotune loop: when
-the first full pass measures H2D time exceeding the compute/drain time it is
-meant to hide, the in-flight queue is deepened.
+H2D bytes, or as int8 with per-row-group scale/zero tables
+(`block_dtype="int8"`, the `core/quant.py` codec, dequantised fused on
+device) for a quarter of them; `tune_prefetch` closes a minimal
+overlap-autotune loop: when the first full pass measures H2D time exceeding
+the compute/drain time it is meant to hide, the in-flight queue is deepened.
 
 Shrinking follows `core/compact.py`'s bucket-compaction design, but here it
 cuts H2D *bytes*, not just FLOPs: after every full pass the union of active
@@ -72,7 +74,9 @@ import numpy as np
 
 from repro.core.dual_solver import (DELTA_EPS, Q_FLOOR, SolveResult,
                                     SolverConfig, TaskBatch)
-from repro.core.streaming import BYTES_F32, StreamConfig
+from repro.core.quant import (GROUP_ROWS, QuantBlock, dequant_rows,
+                              encode_rows, group_scales, quantize_block)
+from repro.core.streaming import BYTES_F32, StreamConfig, tune_prefetch
 
 _H2D_GUARD = getattr(jax, "transfer_guard_host_to_device", None)
 
@@ -233,7 +237,20 @@ def _put(a, device=None):
 # the streamed batch solver: stats, block reader, per-device engine, driver
 # ---------------------------------------------------------------------------
 
-BLOCK_DTYPES = {"f32": np.float32, "bf16": ml_dtypes.bfloat16}
+BLOCK_DTYPES = {"f32": np.float32, "bf16": ml_dtypes.bfloat16,
+                "int8": np.int8}
+
+
+def wire_group(tile: int, cfg: StreamConfig) -> int:
+    """Effective int8 scale-group rows for a given block tile.
+
+    Group boundaries must ALIGN with block boundaries so that a row's
+    encoding is the same whether it travels in a shared full-pass block or a
+    compacted cheap-epoch block (group stats are global-row-aligned either
+    way); `auto_tile_rows` makes every tile a multiple of 8, so
+    gcd(tile, requested) is at least 8 for the default group of 32 — the
+    scale overhead stays at 8 bytes per >= 8 rows."""
+    return math.gcd(tile, max(1, cfg.quant_group_rows))
 
 
 @dataclasses.dataclass
@@ -263,6 +280,10 @@ class Stage2StreamStats:
     kernel_calls: int = 0
     bytes_h2d: int = 0
     bytes_d2h: int = 0
+    bytes_scales: int = 0             # int8 codec scale-table bytes (already
+                                      # included in bytes_h2d / bytes_put —
+                                      # broken out so the exact-byte
+                                      # invariants stay assertable)
     epoch_bytes: List[int] = dataclasses.field(default_factory=list)
     active_history: List[int] = dataclasses.field(default_factory=list)
     # ^ per compaction: active-row union size (single device) / total rows
@@ -277,42 +298,97 @@ class Stage2StreamStats:
     per_device: Optional[List["Stage2StreamStats"]] = None
 
 
-def tune_prefetch(h2d_seconds: float, compute_seconds: float, prefetch: int,
-                  cap: int = 8) -> int:
-    """Minimal overlap-autotune (ROADMAP): the in-flight queue hides
-    min(H2D, compute) behind max(H2D, compute) only while it is deep enough
-    to keep both sides busy.  When the measured H2D time of the first full
-    pass exceeds the drain/compute time it is supposed to overlap, transfer
-    lags compute — double the queue depth (bounded by ``cap``)."""
-    if h2d_seconds > compute_seconds and prefetch < cap:
-        return min(cap, max(prefetch * 2, prefetch + 1))
-    return prefetch
+class _PadStage:
+    """One reusable padded staging buffer for ragged tail blocks.
 
-
-def prep_block(gb: np.ndarray, tile: int, block_dtype: str) -> np.ndarray:
-    """Pad a host G row-block to ``tile`` rows and cast it to the wire dtype.
-
-    Full-tile blocks already in the wire dtype pass through as views of an
-    (immutable) host buffer — G itself, or an engine's wire-dtype `act_G`
-    gather; any block that needs padding or casting gets a FRESH buffer, so
-    fanned-out blocks stay valid while they sit in per-device queues.
+    `prep_block` used to `np.zeros((tile, B))` for EVERY ragged tail — once
+    per pass per solve, and once per cheap epoch per engine.  A stage owns
+    that buffer instead: allocated once, zero-tail-refreshed per use.  Reuse
+    is safe wherever the previous occupant has been consumed before the next
+    `pad` call: `jax.device_put` copies the host buffer before returning, so
+    an engine's own sequential block loop may always reuse, and the shared
+    reader may reuse ACROSS passes because the driver barriers every pass
+    (all queued fan-out closures have run).  The int8 wire pads its encoded
+    values through the same buffer (an int8 one) under the same rules.
     """
+
+    def __init__(self, tile: int, rank: int, block_dtype: str):
+        # int8 tails are padded AFTER encoding (zero codes + inert scale
+        # entries), so the staging buffer holds the wire dtype either way.
+        self.buf = np.zeros((tile, rank), BLOCK_DTYPES[block_dtype])
+
+    def pad(self, gb: np.ndarray) -> np.ndarray:
+        cnt = gb.shape[0]
+        self.buf[:cnt] = gb
+        self.buf[cnt:] = 0
+        return self.buf
+
+
+def pad_quant_block(qb: QuantBlock, tile: int,
+                    stage: Optional[_PadStage] = None) -> QuantBlock:
+    """Pad a quantised block to ``tile`` rows: zero codes for the pad rows
+    and inert (scale 1, zero 0) entries for all-pad scale groups, so pads in
+    a FULL pad group dequantise to exact zeros; pads sharing a ragged real
+    group decode to that group's zero-point — harmless, the epoch kernel
+    treats their c = 0 rows as inert."""
+    cnt, ng = qb.values.shape[0], qb.scales.shape[0]
+    ng_pad = -(-tile // qb.group)
+    if stage is not None:
+        values = stage.pad(qb.values)
+    else:
+        values = np.zeros((tile, qb.values.shape[1]), np.int8)
+        values[:cnt] = qb.values
+    scales = np.zeros((ng_pad, 2), np.float32)
+    scales[:ng] = qb.scales
+    scales[ng:, 0] = 1.0
+    return QuantBlock(values=values, scales=scales, group=qb.group)
+
+
+def prep_block(gb: np.ndarray, tile: int, block_dtype: str,
+               group: int = GROUP_ROWS, stage: Optional[_PadStage] = None):
+    """Pad a host G row-block to ``tile`` rows and encode it in the wire
+    format: an f32/bf16 ndarray, or a `QuantBlock` (int8 values + per-row-
+    group f32 scale/zero table) for ``block_dtype="int8"``.
+
+    Full-tile f32/bf16 blocks already in the wire dtype pass through as views
+    of an (immutable) host buffer — G itself, or an engine's wire-dtype
+    `act_G` gather; a block that needs padding or casting gets a buffer from
+    ``stage`` (reusable, see `_PadStage`) or a fresh one.  int8 blocks are
+    quantised from the REAL rows only and padded after encoding
+    (`pad_quant_block`) — with ``group`` dividing ``tile`` (see `wire_group`)
+    the group stats equal the global-row-aligned stats, so a row's code is
+    block-shape-independent and the shrinking-compacted cheap epochs re-emit
+    the same decoded values (to FMA rounding).
+    """
+    if block_dtype == "int8":
+        qb = quantize_block(np.asarray(gb, np.float32), group)
+        return qb if gb.shape[0] == tile else pad_quant_block(qb, tile, stage)
     if gb.shape[0] == tile and gb.dtype == BLOCK_DTYPES[block_dtype]:
         return gb
+    if gb.shape[0] != tile and stage is not None:
+        # Only the ONE ragged tail per pass may use the shared stage buffer:
+        # full-tile casts (bf16) must stay fresh — several sit in per-device
+        # queues at once.
+        return stage.pad(gb)
     buf = np.zeros((tile, gb.shape[1]), BLOCK_DTYPES[block_dtype])
     buf[: gb.shape[0]] = gb
     return buf
 
 
-def iter_shared_blocks(G: np.ndarray, tile: int, block_dtype: str):
+def iter_shared_blocks(G: np.ndarray, tile: int, block_dtype: str,
+                       group: int = GROUP_ROWS,
+                       stage: Optional[_PadStage] = None):
     """The shared host block reader: yield each (tile, B) row-block of G
     exactly once as ``(sel, cnt, gb_send)`` — the driver fans every yielded
-    buffer out to all live engines, so a full pass reads G once regardless of
-    device count."""
+    buffer out to all live engines, so a full pass reads G (and, for the
+    int8 wire, quantises it) once regardless of device count.  ``stage`` is
+    the caller-owned reusable pad buffer; the driver allocates it once per
+    solve and its per-pass barrier makes cross-pass reuse safe."""
     n = G.shape[0]
     for b in range(math.ceil(n / tile)):
         s, e = b * tile, min((b + 1) * tile, n)
-        yield slice(s, e), e - s, prep_block(G[s:e], tile, block_dtype)
+        yield slice(s, e), e - s, prep_block(G[s:e], tile, block_dtype,
+                                             group, stage)
 
 
 class _BlockPipeline:
@@ -371,7 +447,8 @@ class _Stage2Engine:
     """
 
     def __init__(self, G, tasks: TaskBatch, config: SolverConfig,
-                 cfg: StreamConfig, *, epoch_fn: Callable, device, tile: int):
+                 cfg: StreamConfig, *, epoch_fn: Callable, device, tile: int,
+                 scale_cache: Optional[dict] = None):
         self.G = G
         self.config, self.cfg = config, cfg
         self.epoch_fn, self.device, self.tile = epoch_fn, device, tile
@@ -410,9 +487,23 @@ class _Stage2Engine:
         self.epochs_run = 0
         self.act: Optional[np.ndarray] = None    # compacted active-row union
         self.act_G: Optional[np.ndarray] = None  # host gather of G[act]
+        self.act_q: Optional[List[QuantBlock]] = None
+        # ^ int8 wire: per-tile-block quantised shadow of the gather (encoded
+        #   once per compaction, reused by every cheap epoch until the next)
         self.blk_active = None                   # per-task block occupancy
         self.shrink_k = config.shrink_k if config.shrink else 1 << 30
         self._bf16 = cfg.block_dtype == "bf16"
+        self._wire = cfg.block_dtype
+        self._group = wire_group(tile, cfg)
+        self._scale_cache = scale_cache if scale_cache is not None else {}
+        # ^ lazy global-row-aligned (ng, 2) scale table of G — computed at
+        #   the first compaction and SHARED across a farm's engines (they
+        #   stream the same G; a concurrent double-compute is a benign race,
+        #   both threads derive the identical table) so compacted rows
+        #   re-encode with the exact scales their shared-pass blocks used
+        self._stage = _PadStage(tile, rank, cfg.block_dtype)
+        # ^ engine-local reusable pad buffer for compacted cheap epochs (the
+        #   engine's block loop is sequential, so reuse is safe)
         self._warm = [t for t in range(T) if self.a_g[t].any()]
         self._epoch = -1
         self._epoch_mark = 0
@@ -471,6 +562,14 @@ class _Stage2Engine:
 
     def _put_block(self, gb_send):
         t0 = time.perf_counter()
+        if isinstance(gb_send, QuantBlock):
+            # int8 wire: ship values + compact scale table, dequantise fused
+            # on device — a quarter of the f32 bytes crossed the bus.
+            vals = _put(gb_send.values, self.device)
+            scales = _put(gb_send.scales, self.device)
+            self.stats.put_seconds += time.perf_counter() - t0
+            self.stats.bytes_put += gb_send.nbytes
+            return dequant_rows(vals, scales, gb_send.group)
         gb = _put(gb_send, self.device)
         self.stats.put_seconds += time.perf_counter() - t0
         self.stats.bytes_put += gb_send.nbytes
@@ -532,7 +631,8 @@ class _Stage2Engine:
                 self.epochs_used[t] = self._epoch + 1
         # Re-compact: cheap epochs stream only rows active for at least one
         # unconverged task — shrinking cuts H2D bytes, not just FLOPs.
-        self.act, self.act_G, self.blk_active = None, None, None
+        self.act, self.act_G, self.act_q = None, None, None
+        self.blk_active = None
         live2 = [t for t in range(self.T) if not self.done[t]]
         if self.config.shrink and live2:
             masks = (self.c_g[live2] > 0.0) & (self.u_g[live2] < self.shrink_k)
@@ -540,14 +640,19 @@ class _Stage2Engine:
             self.stats.active_history.append(int(len(union)))
             if len(union) < self.n:
                 self.act = union
-                # Gather (and, for bf16 wire blocks, cast) ONCE per
-                # compaction — the cheap epochs between full passes then
-                # slice pass-through views instead of re-casting per epoch.
-                # G itself stays f32: a persistent bf16 shadow of the whole
-                # factor would cost +50% of the dominant host allocation.
+                # Gather (and, for bf16/int8 wire blocks, re-encode) ONCE
+                # per compaction — the cheap epochs between full passes then
+                # slice pass-through views (bf16/f32) or reuse the per-block
+                # quantised shadow (int8) instead of re-encoding per epoch.
+                # G itself stays f32: a persistent reduced-precision shadow
+                # of the whole factor would cost +25-50% of the dominant
+                # host allocation.
                 act_G = self.G[union]
-                self.act_G = (act_G.astype(BLOCK_DTYPES["bf16"])
-                              if self._bf16 else act_G)
+                if self._wire == "int8":
+                    self.act_q = self._encode_compacted(union, act_G)
+                else:
+                    self.act_G = (act_G.astype(BLOCK_DTYPES["bf16"])
+                                  if self._bf16 else act_G)
                 n_blocks = math.ceil(max(len(union), 1) / self.tile)
                 # Block b of a cheap epoch covers GLOBAL rows
                 # act[b*tile:(b+1)*tile]; a task skips it only when none of
@@ -560,6 +665,35 @@ class _Stage2Engine:
                 }
 
     # ----------------------------------------------------- compacted epochs
+    def _encode_compacted(self, union: np.ndarray,
+                          act_G: np.ndarray) -> List[QuantBlock]:
+        """Quantised shadow of the compacted active rows, encoded ONCE per
+        compaction and reused by every cheap epoch until the next.
+
+        Each row keeps the (scale, zero) of its GLOBAL row group — the
+        same entry its shared-pass block used (`wire_group` aligns group and
+        block boundaries) — so the decoded value of a row is identical (to
+        FMA rounding) between full passes and compacted cheap epochs.  The
+        solver then
+        optimises ONE consistent perturbed problem; re-grouping the gathered
+        rows instead would re-quantise them against different stats and the
+        full-pass KKT check could stall above tolerance forever.  The wire
+        pays per-ROW scale entries (group=1) only on these gathered blocks.
+        """
+        gscales = self._scale_cache.get("gscales")
+        if gscales is None:
+            gscales = group_scales(self.G, self._group)
+            self._scale_cache["gscales"] = gscales
+        srow = gscales[union // self._group]              # (n_act, 2)
+        vals = encode_rows(act_G, srow)
+        tile = self.tile
+        out = []
+        for b in range(math.ceil(max(len(union), 1) / tile)):
+            s, e = b * tile, min((b + 1) * tile, len(union))
+            qb = QuantBlock(values=vals[s:e], scales=srow[s:e], group=1)
+            out.append(qb if e - s == tile else pad_quant_block(qb, tile))
+        return out
+
     def run_cheap_epoch(self) -> None:
         """One engine-local non-full epoch over the shard's own compacted
         active-row union (the driver only calls this when `act` is set; an
@@ -571,8 +705,13 @@ class _Stage2Engine:
         tile = self.tile
         for b in range(math.ceil(len(rows) / tile)):
             s, e = b * tile, min((b + 1) * tile, len(rows))
-            gb_send = prep_block(self.act_G[s:e], tile, self.cfg.block_dtype)
+            gb_send = (self.act_q[b] if self.act_q is not None
+                       else prep_block(self.act_G[s:e], tile,
+                                       self.cfg.block_dtype, self._group,
+                                       self._stage))
             self.stats.bytes_h2d += gb_send.nbytes
+            if isinstance(gb_send, QuantBlock):
+                self.stats.bytes_scales += gb_send.scale_bytes
             self.stats.blocks_streamed += 1
             self.stats.rows_streamed += e - s
             gb = self._put_block(gb_send)
@@ -629,13 +768,19 @@ def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
     """
     fan = fanout or _InlineFanout()
     reader = Stage2StreamStats(tile_rows=tile, block_dtype=cfg.block_dtype)
+    # One reusable pad buffer for every shared pass of this solve: the
+    # barrier below guarantees the previous pass's tail has been consumed.
+    stage = _PadStage(tile, G.shape[1], cfg.block_dtype)
 
     def shared_pass(group, kind):
         g0 = reader.bytes_h2d
         for e in group:
             e.begin_pass(kind)
-        for sel, cnt, gb in iter_shared_blocks(G, tile, cfg.block_dtype):
+        for sel, cnt, gb in iter_shared_blocks(G, tile, cfg.block_dtype,
+                                               wire_group(tile, cfg), stage):
             reader.bytes_h2d += gb.nbytes
+            if isinstance(gb, QuantBlock):
+                reader.bytes_scales += gb.scale_bytes
             reader.blocks_streamed += 1
             reader.rows_streamed += cnt
             for e in group:
@@ -710,10 +855,12 @@ def merge_stream_stats(reader: Stage2StreamStats,
                             block_dtype=reader.block_dtype,
                             n_devices=n_devices)
     out.bytes_h2d = reader.bytes_h2d
+    out.bytes_scales = reader.bytes_scales
     out.blocks_streamed = reader.blocks_streamed
     out.rows_streamed = reader.rows_streamed
     for s in per_dev:
         out.bytes_h2d += s.bytes_h2d
+        out.bytes_scales += s.bytes_scales
         out.bytes_put += s.bytes_put
         out.bytes_d2h += s.bytes_d2h
         out.blocks_streamed += s.blocks_streamed

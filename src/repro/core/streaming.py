@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from functools import partial
 from typing import Callable, Optional, Sequence
 
@@ -35,8 +36,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kernel_fn import KernelParams, gram
+from repro.core.quant import GROUP_ROWS, quantize_rows
 
 BYTES_F32 = 4
+
+WIRE_DTYPES = ("f32", "bf16", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,8 +58,16 @@ class StreamConfig:
     min_chunk_rows: int = 256
     tile_rows: Optional[int] = None      # stage-2 G block rows (None -> derived)
     block_dtype: str = "f32"             # wire dtype of streamed stage-2 G
-                                         # blocks: "f32" or "bf16" (half H2D,
-                                         # upcast on device before the epoch)
+                                         # blocks: "f32", "bf16" (half H2D,
+                                         # upcast on device) or "int8"
+                                         # (quarter H2D, per-row-group
+                                         # scale/zero codec, device dequant)
+    stage1_dtype: str = "f32"            # wire dtype of streamed stage-1 x
+                                         # chunks: "f32" or "int8" (symmetric
+                                         # codec; dequant fused into the gram
+                                         # kernel)
+    quant_group_rows: int = GROUP_ROWS   # rows per int8 scale group (both
+                                         # stages; 8 scale bytes per group)
     overlap_devices: bool = True         # >1 local device: overlapped task
                                          # farm behind one shared block reader
     autotune_prefetch: bool = True       # deepen the in-flight queue when the
@@ -69,11 +81,49 @@ class StreamConfig:
             raise ValueError("chunk_rows must be positive")
         if self.tile_rows is not None and self.tile_rows < 1:
             raise ValueError("tile_rows must be positive")
-        if self.block_dtype not in ("f32", "bf16"):
-            raise ValueError(f"block_dtype must be 'f32' or 'bf16', "
+        if self.block_dtype not in WIRE_DTYPES:
+            raise ValueError(f"block_dtype must be one of {WIRE_DTYPES}, "
                              f"got {self.block_dtype!r}")
+        if self.stage1_dtype not in ("f32", "int8"):
+            raise ValueError(f"stage1_dtype must be 'f32' or 'int8', "
+                             f"got {self.stage1_dtype!r}")
+        if self.quant_group_rows < 1:
+            raise ValueError("quant_group_rows must be >= 1")
         if self.prefetch_cap < 1:
             raise ValueError("prefetch_cap must be >= 1")
+
+
+def tune_prefetch(h2d_seconds: float, compute_seconds: float, prefetch: int,
+                  cap: int = 8) -> int:
+    """Minimal overlap-autotune shared by BOTH streamed stages (ROADMAP): the
+    in-flight queue hides min(H2D, compute) behind max(H2D, compute) only
+    while it is deep enough to keep both sides busy.  When the measured H2D
+    time of the first pipeline window exceeds the drain/compute time it is
+    supposed to overlap, transfer lags compute — double the queue depth
+    (bounded by ``cap``)."""
+    if h2d_seconds > compute_seconds and prefetch < cap:
+        return min(cap, max(prefetch * 2, prefetch + 1))
+    return prefetch
+
+
+@dataclasses.dataclass
+class Stage1StreamStats:
+    """Traffic accounting of one streamed stage-1 factor build.
+
+    `bytes_h2d` counts the CHUNK wire bytes (the n-scaling traffic this
+    pipeline exists to bound) — int8 scale tables included, broken out in
+    `bytes_scales`; the one-time landmark/projector replicas are excluded so
+    per-dtype comparisons stay exact."""
+
+    chunks: int = 0
+    rows: int = 0
+    bytes_h2d: int = 0
+    bytes_scales: int = 0
+    put_seconds: float = 0.0          # host time inside chunk H2D puts
+    drain_seconds: float = 0.0        # host time blocked on G-chunk fetches
+    seconds: float = 0.0
+    wire_dtype: str = "f32"
+    prefetch_final: int = 0           # queue depth after autotune
 
 
 def resident_bytes(p: int, budget: int) -> int:
@@ -118,6 +168,25 @@ def _chunk_features(xb, landmarks, projector, params: KernelParams, gram_fn):
     return gram_fn(xb, landmarks, params) @ projector
 
 
+@partial(jax.jit, static_argnames=("params", "group", "gram_q8_fn"))
+def _chunk_features_q8(vals, scales, landmarks, projector,
+                       params: KernelParams, group: int, gram_q8_fn):
+    """One chunk's G rows from the int8 wire: the H2D copy shipped int8
+    values + the compact scale table, and the gram kernel dequantises fused
+    (no fp32 x chunk ever materialises on device)."""
+    return gram_q8_fn(vals, scales, landmarks, params, group=group) @ projector
+
+
+def default_gram_q8_fn() -> Callable:
+    """Fused-dequant Pallas gram on TPU; the jnp dequant+gram oracle
+    elsewhere (interpret-mode Pallas is pure overhead on CPU)."""
+    if jax.default_backend() == "tpu":
+        from repro.kernels.ops import gram_q8
+        return gram_q8
+    from repro.kernels.ref import gram_q8_ref
+    return gram_q8_ref
+
+
 def stream_factor_blocks(
     blocks,
     n: int,
@@ -129,6 +198,12 @@ def stream_factor_blocks(
     gram_fn: Callable = gram,
     out: Optional[np.ndarray] = None,
     devices: Optional[Sequence] = None,
+    wire_dtype: str = "f32",
+    quant_group_rows: int = GROUP_ROWS,
+    gram_q8_fn: Optional[Callable] = None,
+    autotune_prefetch: bool = False,
+    prefetch_cap: int = 8,
+    stats: Optional[Stage1StreamStats] = None,
 ) -> np.ndarray:
     """Fill a host-resident G from an *iterator* of dense row blocks.
 
@@ -141,6 +216,19 @@ def stream_factor_blocks(
     copies it into ``out``.  Passing ``devices`` round-robins *disjoint*
     block streams across them (landmarks/projector replicated once per
     device up front).
+
+    ``wire_dtype="int8"`` quantises each chunk host-side with the symmetric
+    per-row-group codec (`core/quant.py`; zero padding through the Pallas
+    tiles must dequantise to exact zeros, hence symmetric) and ships int8
+    values + the compact scale table at ~quarter the H2D bytes; the gram
+    consumer (``gram_q8_fn``, `default_gram_q8_fn` when None) fuses the
+    dequantisation into its tile loads.
+
+    ``autotune_prefetch`` closes the stage-1 overlap loop (ROADMAP): once
+    the first full pipeline window has been measured, the in-flight depth is
+    deepened via `tune_prefetch` when H2D put time exceeds drain/compute
+    time (bounded by ``prefetch_cap``); the tuned depth lands in
+    ``stats.prefetch_final``.
     """
     rank = projector.shape[1]
     if out is None:
@@ -149,6 +237,15 @@ def stream_factor_blocks(
         raise ValueError(f"out buffer {out.shape} != {(n, rank)}")
     if devices is None:
         devices = [None]
+    if wire_dtype not in ("f32", "int8"):
+        raise ValueError(f"stage-1 wire_dtype must be 'f32' or 'int8', "
+                         f"got {wire_dtype!r}")
+    quant = wire_dtype == "int8"
+    if quant and gram_q8_fn is None:
+        gram_q8_fn = default_gram_q8_fn()
+    st = stats if stats is not None else Stage1StreamStats()
+    st.wire_dtype = wire_dtype
+    t_start = time.perf_counter()
 
     # One resident replica of the landmark block per device.
     resident = []
@@ -164,9 +261,19 @@ def stream_factor_blocks(
 
     def drain_one():
         s, e, gb = inflight.popleft()
+        t0 = time.perf_counter()
         out[s:e] = np.asarray(gb)   # blocks on this chunk only
+        st.drain_seconds += time.perf_counter() - t0
 
-    max_inflight = prefetch * len(devices)
+    def put(a, d):
+        t0 = time.perf_counter()
+        b = jnp.asarray(a) if d is None else jax.device_put(a, d)
+        st.put_seconds += time.perf_counter() - t0
+        st.bytes_h2d += a.nbytes
+        return b
+
+    max_inflight = max(1, prefetch) * len(devices)
+    tuned = not autotune_prefetch
     s = 0
     for i, xb in enumerate(blocks):
         xb = np.asarray(xb, np.float32)
@@ -175,16 +282,32 @@ def stream_factor_blocks(
             raise ValueError(f"block iterator produced more than {n} rows")
         d = devices[i % len(devices)]
         lm, pr = resident[i % len(devices)]
-        xb = jnp.asarray(xb) if d is None else jax.device_put(xb, d)
-        gb = _chunk_features(xb, lm, pr, params, gram_fn)
+        if quant:
+            vals, scales = quantize_rows(xb, quant_group_rows, symmetric=True)
+            st.bytes_scales += scales.nbytes
+            gb = _chunk_features_q8(put(vals, d), put(scales, d), lm, pr,
+                                    params, quant_group_rows, gram_q8_fn)
+        else:
+            gb = _chunk_features(put(xb, d), lm, pr, params, gram_fn)
+        st.chunks += 1
+        st.rows += e - s
         inflight.append((s, e, gb))
         if len(inflight) >= max_inflight:
             drain_one()
+            if not tuned:
+                # First pipeline window measured: deepen the in-flight queue
+                # if the H2D side could not hide behind the drain/compute.
+                tuned = True
+                prefetch = tune_prefetch(st.put_seconds, st.drain_seconds,
+                                         prefetch, prefetch_cap)
+                max_inflight = prefetch * len(devices)
         s = e
     while inflight:
         drain_one()
     if s != n:
         raise ValueError(f"block iterator produced {s} rows, expected {n}")
+    st.prefetch_final = prefetch
+    st.seconds = time.perf_counter() - t_start
     return out
 
 
@@ -199,18 +322,20 @@ def stream_factor_rows(
     gram_fn: Callable = gram,
     out: Optional[np.ndarray] = None,
     devices: Optional[Sequence] = None,
+    **wire_kwargs,
 ) -> np.ndarray:
     """Fill a host-resident G = K(x, landmarks) @ projector, chunk by chunk.
 
     ``x`` stays on host (numpy); row chunks of ``chunk_rows`` are sliced off
-    it and fed through `stream_factor_blocks`' in-flight pipeline.
+    it and fed through `stream_factor_blocks`' in-flight pipeline.  Extra
+    keyword arguments (``wire_dtype``, ``stats``, ...) pass through.
     """
     x = np.asarray(x, np.float32)
     n = x.shape[0]
     blocks = (x[s:min(s + chunk_rows, n)] for s in range(0, n, chunk_rows))
     return stream_factor_blocks(
         blocks, n, landmarks, projector, params, prefetch=prefetch,
-        gram_fn=gram_fn, out=out, devices=devices)
+        gram_fn=gram_fn, out=out, devices=devices, **wire_kwargs)
 
 
 def compute_factor_streamed(
@@ -305,13 +430,19 @@ def _streamed_factor_from_landmarks(
     projector = projector[:, :rank]
 
     chunk = auto_chunk_rows(n, p, landmarks.shape[0], config)
+    stats = Stage1StreamStats()
     G = stream_factor_blocks(
         make_blocks(chunk), n, landmarks, projector, params,
-        prefetch=config.prefetch, gram_fn=gram_fn, devices=devices)
+        prefetch=config.prefetch, gram_fn=gram_fn, devices=devices,
+        wire_dtype=config.stage1_dtype,
+        quant_group_rows=config.quant_group_rows,
+        autotune_prefetch=config.autotune_prefetch,
+        prefetch_cap=config.prefetch_cap, stats=stats)
 
     return nystrom.LowRankFactor(
         G=G, landmarks=landmarks, projector=projector, eigvals=evals,
-        effective_rank=rank, kernel=params, streamed=True)
+        effective_rank=rank, kernel=params, streamed=True,
+        stage1_stats=stats)
 
 
 def _select_landmarks_host(x: np.ndarray, budget: int, key) -> np.ndarray:

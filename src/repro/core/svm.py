@@ -40,6 +40,8 @@ class FitStats:
     violations: Optional[np.ndarray] = None
     effective_rank: int = 0
     stage1_streamed: bool = False   # True -> G came from the out-of-core path
+    stage1_stats: Optional[object] = None  # streaming.Stage1StreamStats
+                                           # (chunk wire bytes / dtype)
     stage2_streamed: bool = False   # True -> solver streamed G row-blocks
     stage2_stats: Optional[Stage2StreamStats] = None
     polished: bool = False          # True -> stage 2 ran the polish ladder
@@ -114,6 +116,8 @@ class LPDSVM:
             self.stats.stage1_seconds = time.perf_counter() - t0
             self.stats.effective_rank = self.factor.effective_rank
             self.stats.stage1_streamed = self.factor.streamed
+            self.stats.stage1_stats = getattr(self.factor, "stage1_stats",
+                                              None)
         return self.factor
 
     # ------------------------------------------------------------------ stage 2
@@ -129,6 +133,7 @@ class LPDSVM:
             self.factor = factor
             self.stats.effective_rank = factor.effective_rank
             self.stats.stage1_streamed = factor.streamed
+            self.stats.stage1_stats = getattr(factor, "stage1_stats", None)
         self.prepare(x)
 
         warm = None

@@ -12,10 +12,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.kernel_fn import KernelParams
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.gram import gram_pallas
+from repro.kernels.gram import gram_pallas, gram_pallas_q8
 from repro.kernels.smo import smo_epoch_pallas
 
 
@@ -48,6 +49,56 @@ def gram(x: jnp.ndarray, z: jnp.ndarray, params: KernelParams, *,
     x = _pad_axis(_pad_axis(jnp.asarray(x, jnp.float32), 1, tp), 0, tn)
     z = _pad_axis(_pad_axis(jnp.asarray(z, jnp.float32), 1, tp), 0, tm)
     out = gram_pallas(x, z, params, tn=tn, tm=tm, tp=tp, interpret=interpret)
+    return out[:n, :m]
+
+
+def gram_q8(values: jnp.ndarray, scales: jnp.ndarray, z: jnp.ndarray,
+            params: KernelParams, *, group: int = 32,
+            tn: int = 128, tm: int = 128, tp: int = 512,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Batch kernel matrix from a quantised x operand, any shapes.
+
+    ``values`` is the (n, p) int8 wire block and ``scales`` the compact
+    (ng, 2) per-row-group scale/zero table (`core/quant.py`); z stays fp32
+    (device-resident landmarks).  The compact table is expanded to per-row
+    (n, 1) scale/zero columns on device — 8 bytes per GROUP cross the bus,
+    not 8 per row — and dequantisation is fused into the Pallas kernel's
+    tile loads (`gram_pallas_q8`), so no fp32 copy of x is ever
+    materialised in HBM.
+
+    Padding contract: padded ROWS get scale 0 / zero 0 (dequantise to exact
+    zeros, sliced off the output anyway).  Feature-axis zero padding of the
+    int8 values dequantises to the row's zero-point, which cancels in the
+    dot (z's padded columns are fp32 zeros) but NOT in the RBF row norms —
+    so RBF with a ragged feature axis requires the symmetric codec
+    (zero = 0), which is what the stage-1 streaming pipeline emits.  The
+    contract is checked here when the scale table is concrete; under jit
+    (traced scales) the caller must guarantee it.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n, p = values.shape
+    m = z.shape[0]
+    if params.kind == "rbf" and p % tp:
+        try:
+            zero_points = np.asarray(scales)[:, 1]
+        except Exception:        # traced under jit: contract is the caller's
+            zero_points = None
+        if zero_points is not None and np.any(zero_points != 0.0):
+            raise ValueError(
+                "gram_q8: RBF with a feature axis padded to the tile "
+                f"(p={p}, tp={tp}) requires the symmetric codec — affine "
+                "zero-points would leak into the row norms; quantise with "
+                "quantize_rows(..., symmetric=True)")
+    ng = scales.shape[0]
+    sx = jnp.repeat(scales[:, 0], group, total_repeat_length=ng * group)[:n]
+    zx = jnp.repeat(scales[:, 1], group, total_repeat_length=ng * group)[:n]
+    vq = _pad_axis(_pad_axis(jnp.asarray(values, jnp.int8), 1, tp), 0, tn)
+    sx = _pad_axis(sx.reshape(-1, 1).astype(jnp.float32), 0, tn)
+    zx = _pad_axis(zx.reshape(-1, 1).astype(jnp.float32), 0, tn)
+    zp = _pad_axis(_pad_axis(jnp.asarray(z, jnp.float32), 1, tp), 0, tm)
+    out = gram_pallas_q8(vq, sx, zx, zp, params, tn=tn, tm=tm, tp=tp,
+                         interpret=interpret)
     return out[:n, :m]
 
 

@@ -13,6 +13,18 @@ def gram_ref(x: jnp.ndarray, z: jnp.ndarray, params: KernelParams) -> jnp.ndarra
     return _gram_ref(x, z, params)
 
 
+def gram_q8_ref(values: jnp.ndarray, scales: jnp.ndarray, z: jnp.ndarray,
+                params: KernelParams, *, group: int = 32) -> jnp.ndarray:
+    """Oracle for the int8-wire gram path (`gram_pallas_q8` /
+    `kernels.ops.gram_q8`): dequantise the (n, p) int8 values with the
+    compact (ng, 2) scale table (`core/quant.py` codec), then the fp32
+    reference kernel.  Off-TPU this IS the streamed q8 gram (interpret-mode
+    Pallas is pure overhead on CPU); the wire savings are identical — only
+    the int8 values + scales cross the host->device boundary."""
+    from repro.core.quant import dequant_rows
+    return _gram_ref(dequant_rows(values, scales, group), z, params)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True):
     """Oracle for kernels/flash_attention.py.  q/k/v (BH, S, D)."""
     BH, S, D = q.shape

@@ -109,6 +109,7 @@ def train_from_libsvm(args, stream_config):
 
 
 def _report(svm):
+    s1 = svm.stats.stage1_stats
     s2 = svm.stats.stage2_stats
     print(f"stage1 {svm.stats.stage1_seconds:.2f}s (rank "
           f"{svm.stats.effective_rank}"
@@ -116,12 +117,20 @@ def _report(svm):
           f"stage2 {svm.stats.stage2_seconds:.2f}s "
           f"({svm.stats.n_tasks} binary SVMs"
           f"{', streamed' if svm.stats.stage2_streamed else ''})")
+    if s1 is not None:
+        scales = (f" ({s1.bytes_scales / 2**10:.1f} KiB scales)"
+                  if s1.bytes_scales else "")
+        print(f"stage1 stream: {s1.chunks} x {s1.wire_dtype} chunks, "
+              f"prefetch {s1.prefetch_final}, "
+              f"{s1.bytes_h2d / 2**20:.1f} MiB H2D{scales}")
     if s2 is not None:
         print(f"stage2 stream: tile {s2.tile_rows} rows x {s2.block_dtype} "
               f"blocks, {s2.n_devices} device(s), prefetch "
               f"{s2.prefetch_final}, {s2.epochs} epochs, "
-              f"{s2.bytes_h2d / 2**20:.1f} MiB H2D / "
-              f"{s2.bytes_d2h / 2**20:.1f} MiB D2H, "
+              f"{s2.bytes_h2d / 2**20:.1f} MiB H2D"
+              + (f" ({s2.bytes_scales / 2**10:.1f} KiB scales)"
+                 if s2.bytes_scales else "")
+              + f" / {s2.bytes_d2h / 2**20:.1f} MiB D2H, "
               f"active {s2.active_history}")
     tr = svm.stats.polish_trace
     if tr is not None:
@@ -159,10 +168,21 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="force the out-of-core pipelines (both stages) "
                          "regardless of budget")
-    ap.add_argument("--block-dtype", choices=("f32", "bf16"), default="f32",
+    ap.add_argument("--block-dtype", choices=("f32", "bf16", "int8"),
+                    default="f32",
                     help="wire dtype of streamed stage-2 G blocks; bf16 "
-                         "halves the H2D bytes (upcast on device) and, like "
-                         "--tile-rows, forces streaming without a budget")
+                         "halves the H2D bytes (upcast on device), int8 "
+                         "quarters them (per-row-group scale/zero codec, "
+                         "fused device dequant); like --tile-rows, a non-f32 "
+                         "dtype forces streaming without a budget")
+    ap.add_argument("--stage1-dtype", choices=("f32", "int8"), default="f32",
+                    help="wire dtype of streamed stage-1 x chunks; int8 "
+                         "quarters the chunk H2D bytes with dequantisation "
+                         "fused into the gram kernel (forces streaming "
+                         "without a budget)")
+    ap.add_argument("--quant-group-rows", type=int, default=0,
+                    help="rows per int8 scale group (0 = default 32; both "
+                         "stages)")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable the overlapped multi-device stage-2 task "
                          "farm (serial per-device streams; single-device "
@@ -190,17 +210,22 @@ def main():
     stream_config = None
     # An explicit chunk/tile size or wire dtype with no budget is a request
     # to stream, not a hint to the (roomy) default budget; --stream forces.
-    bf16 = args.block_dtype != "f32"
+    from repro.core.quant import GROUP_ROWS
+    if args.quant_group_rows < 0:
+        ap.error(f"--quant-group-rows must be >= 0, got {args.quant_group_rows}")
+    quant = args.block_dtype != "f32" or args.stage1_dtype != "f32"
     force = args.stream or ((args.chunk_rows > 0 or args.tile_rows > 0
-                             or bf16) and args.device_budget_mb <= 0)
+                             or quant) and args.device_budget_mb <= 0)
     if (args.device_budget_mb > 0 or args.chunk_rows > 0
-            or args.tile_rows > 0 or args.stream or bf16 or args.no_overlap):
+            or args.tile_rows > 0 or args.stream or quant or args.no_overlap):
         from repro.core import StreamConfig
         stream_config = StreamConfig(
             device_budget_bytes=int(args.device_budget_mb * 2**20) or 2 << 30,
             chunk_rows=args.chunk_rows or None,
             tile_rows=args.tile_rows or None,
             block_dtype=args.block_dtype,
+            stage1_dtype=args.stage1_dtype,
+            quant_group_rows=args.quant_group_rows or GROUP_ROWS,
             overlap_devices=not args.no_overlap)
 
     if args.libsvm:

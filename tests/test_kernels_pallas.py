@@ -35,6 +35,60 @@ def test_gram_kernel_tile_sweep(rng, tn, tm, tp):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("n,m,p", [(64, 24, 32), (70, 9, 33), (33, 40, 100)])
+@pytest.mark.parametrize("kind", ["rbf", "linear", "poly", "tanh"])
+def test_gram_q8_fused_dequant_matches_ref(rng, n, m, p, kind):
+    """The int8-wire gram kernel (fused in-register dequant) must agree with
+    dequantise-then-gram to fp32 accumulation tolerance, ragged shapes
+    included.  The symmetric codec keeps feature-axis zero padding exact for
+    every kernel kind (RBF needs the true row norms)."""
+    from repro.core.quant import quantize_rows
+    x = rng.normal(size=(n, p)).astype(np.float32)
+    z = jnp.asarray(rng.normal(size=(m, p)), jnp.float32)
+    kp = KernelParams(kind, gamma=0.11, coef0=0.3, degree=2)
+    v, s = quantize_rows(x, 32, symmetric=True)
+    got = ops.gram_q8(jnp.asarray(v), jnp.asarray(s), z, kp, group=32,
+                      tn=32, tm=8, tp=32, interpret=True)
+    want = ref.gram_q8_ref(jnp.asarray(v), jnp.asarray(s), z, kp, group=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gram_q8_rejects_affine_rbf_with_ragged_features(rng):
+    """Affine zero-points would leak into the RBF row norms through the
+    feature-axis padding — the wrapper rejects that combination when the
+    scale table is concrete."""
+    from repro.core.quant import quantize_rows
+    x = (rng.normal(size=(32, 33)) + 5.0).astype(np.float32)
+    z = jnp.asarray(rng.normal(size=(8, 33)), jnp.float32)
+    v, s = quantize_rows(x, 32)                  # affine: nonzero zeros
+    with pytest.raises(ValueError, match="symmetric"):
+        ops.gram_q8(jnp.asarray(v), jnp.asarray(s), z,
+                    KernelParams("rbf", gamma=0.1), group=32,
+                    tn=32, tm=8, tp=32, interpret=True)
+    # symmetric codec with the same shapes is fine
+    vs, ss = quantize_rows(x, 32, symmetric=True)
+    ops.gram_q8(jnp.asarray(vs), jnp.asarray(ss), z,
+                KernelParams("rbf", gamma=0.1), group=32,
+                tn=32, tm=8, tp=32, interpret=True)
+
+
+def test_gram_q8_close_to_exact_gram(rng):
+    """End-to-end codec error through the kernel stays at the scale/2 level:
+    the quantised gram is a small perturbation of the exact one."""
+    from repro.core.quant import quantize_rows
+    x = rng.normal(size=(96, 48)).astype(np.float32)
+    z = jnp.asarray(rng.normal(size=(32, 48)), jnp.float32)
+    kp = KernelParams("rbf", gamma=0.1)
+    v, s = quantize_rows(x, 32, symmetric=True)
+    got = np.asarray(ops.gram_q8(jnp.asarray(v), jnp.asarray(s), z, kp,
+                                 group=32, tn=32, tm=8, tp=16,
+                                 interpret=True))
+    exact = np.asarray(ref.gram_ref(jnp.asarray(x), z, kp))
+    assert np.abs(got - exact).max() < 0.05
+    assert np.abs(got - exact).mean() < 0.01
+
+
 def _smo_inputs(rng, n=96, B=64, frac_pad=0.1):
     G = jnp.asarray(rng.normal(size=(n, B)) / np.sqrt(B), jnp.float32)
     y = jnp.asarray(rng.choice([-1.0, 1.0], size=n), jnp.float32)

@@ -1,0 +1,119 @@
+"""The int8 per-row-group wire codec (`core/quant.py`).
+
+Pins down (a) the reconstruction-error bound scale/2 in both codec modes,
+(b) exactness guarantees the streaming pipelines lean on — constant groups,
+zero values under the symmetric mode, zero padding through `pad_quant_block`
+— (c) the byte model (values + 8 bytes per group) the BENCH invariants
+assert against, and (d) host/device dequant agreement.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.quant import (GROUP_ROWS, QuantBlock, dequant_rows,
+                              dequantize_rows, encode_rows, expand_scales,
+                              group_scales, max_quant_error, n_groups,
+                              quant_bytes, quant_scale_bytes, quantize_block,
+                              quantize_rows)
+
+
+@pytest.mark.parametrize("symmetric", [False, True])
+@pytest.mark.parametrize("n,p,group", [(64, 16, 32), (70, 9, 32), (5, 3, 8),
+                                       (31, 4, 1)])
+def test_roundtrip_error_bound(symmetric, n, p, group):
+    x = np.random.default_rng(7).normal(size=(n, p)).astype(np.float32) * 3.0
+    v, s = quantize_rows(x, group, symmetric=symmetric)
+    assert v.dtype == np.int8 and s.shape == (n_groups(n, group), 2)
+    assert np.abs(v.astype(np.int32)).max() <= 127
+    xh = dequantize_rows(v, s, group)
+    per_row_bound = np.repeat(s[:, 0], group)[:n, None] * 0.5
+    assert (np.abs(xh - x) <= per_row_bound + 1e-7).all()
+    assert np.abs(xh - x).max() <= max_quant_error(s) + 1e-7
+
+
+def test_constant_groups_and_zeros_are_exact():
+    x = np.full((48, 6), 0.731, np.float32)
+    for symmetric in (False, True):
+        v, s = quantize_rows(x, 16, symmetric=symmetric)
+        if not symmetric:
+            np.testing.assert_array_equal(dequantize_rows(v, s, 16), x)
+    z = np.zeros((40, 5), np.float32)
+    v, s = quantize_rows(z, 32, symmetric=True)
+    assert (v == 0).all()
+    np.testing.assert_array_equal(dequantize_rows(v, s, 32), z)
+
+
+def test_affine_outperforms_symmetric_on_shifted_data():
+    """The affine zero-point is the reason stage 2 uses it: one-sided data
+    (RBF-featureish, all positive) wastes half the symmetric range."""
+    rng = np.random.default_rng(3)
+    x = (10.0 + rng.random((64, 8))).astype(np.float32)
+    va, sa = quantize_rows(x, 32)
+    vs, ss = quantize_rows(x, 32, symmetric=True)
+    err_a = np.abs(dequantize_rows(va, sa, 32) - x).max()
+    err_s = np.abs(dequantize_rows(vs, ss, 32) - x).max()
+    assert err_a < err_s / 4
+
+
+def test_device_dequant_matches_host():
+    """Host and device dequant agree to FMA rounding (XLA may fuse the
+    multiply-add; 1-ulp differences are expected and harmless — the codec's
+    own error is ~5 orders of magnitude larger)."""
+    x = np.random.default_rng(1).normal(size=(50, 12)).astype(np.float32)
+    v, s = quantize_rows(x, 8)
+    host = dequantize_rows(v, s, 8)
+    dev = np.asarray(dequant_rows(jnp.asarray(v), jnp.asarray(s), 8))
+    np.testing.assert_allclose(host, dev, rtol=1e-6, atol=1e-6)
+    # per-row tables (group=1): the compacted cheap-epoch wire layout
+    v1, s1 = quantize_rows(x, 1)
+    np.testing.assert_allclose(
+        dequantize_rows(v1, s1, 1),
+        np.asarray(dequant_rows(jnp.asarray(v1), jnp.asarray(s1), 1)),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_encode_rows_with_gathered_global_scales():
+    """A row encoded under its global group scale decodes identically no
+    matter which block it travels in — the invariant the streamed solver's
+    shrinking compaction relies on."""
+    x = np.random.default_rng(2).normal(size=(96, 7)).astype(np.float32)
+    group = 32
+    gs = group_scales(x, group)
+    full_v = encode_rows(x, expand_scales(gs, group, 96))
+    rows = np.array([3, 37, 40, 65, 95])
+    gathered_v = encode_rows(x[rows], gs[rows // group])
+    np.testing.assert_array_equal(gathered_v, full_v[rows])
+    np.testing.assert_array_equal(
+        dequantize_rows(gathered_v, gs[rows // group], 1),
+        dequantize_rows(full_v, expand_scales(gs, group, 96), 1)[rows])
+
+
+def test_byte_model():
+    assert quant_bytes(96, 64, 32) == 96 * 64 + 3 * 8
+    assert quant_bytes(70, 9, 32) == 70 * 9 + 3 * 8
+    assert quant_scale_bytes(70, 32) == 3 * 8
+    qb = quantize_block(np.ones((70, 9), np.float32), 32)
+    assert qb.nbytes == quant_bytes(70, 9, 32)
+    assert qb.scale_bytes == quant_scale_bytes(70, 32)
+    assert qb.shape == (70, 9)
+    # the ~4x headline at the default group
+    assert quant_bytes(128, 64, GROUP_ROWS) * 3 < 128 * 64 * 4
+
+
+def test_pad_quant_block_pads_exact_zero_groups():
+    from repro.core.solver_stream import pad_quant_block
+    x = np.random.default_rng(5).normal(size=(40, 6)).astype(np.float32)
+    qb = quantize_block(x, 8)                       # 5 groups, aligned
+    padded = pad_quant_block(qb, 64)
+    assert padded.values.shape == (64, 6)
+    assert padded.scales.shape == (8, 2)
+    out = dequantize_rows(padded.values, padded.scales, 8)
+    np.testing.assert_array_equal(out[:40], dequantize_rows(qb.values,
+                                                            qb.scales, 8))
+    np.testing.assert_array_equal(out[40:], np.zeros((24, 6), np.float32))
+
+
+def test_empty_block():
+    v, s = quantize_rows(np.zeros((0, 4), np.float32), 32)
+    assert v.shape == (0, 4) and s.shape == (0, 2)
+    assert quantize_block(np.zeros((0, 4), np.float32)).nbytes == 0

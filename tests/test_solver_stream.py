@@ -219,6 +219,131 @@ def test_bf16_blocks_parity_tolerance(dataset):
     assert (res.violation < cfg.tol).all()
 
 
+# ------------------------------------------------------------ int8 blocks
+
+@pytest.mark.parametrize("dataset", ["checker", "spiral"])
+def test_int8_blocks_parity_tolerance(dataset):
+    """`StreamConfig.block_dtype="int8"` quarters the streamed G bytes
+    (scales included — the exact byte model is asserted) while the solution
+    stays within tolerance of the fp32 monolithic solve on the classic RBF
+    stress suites: <= 1% decision flips, dual objective within rtol 5e-3,
+    converged below the same tol."""
+    import math
+    from repro.core.quant import quant_scale_bytes
+    from repro.core.solver_stream import wire_group
+    from repro.data import make_checker, make_two_spirals
+    if dataset == "checker":
+        x, y = make_checker(500, seed=3)
+        kp = KernelParams("rbf", gamma=8.0)
+    else:
+        x, y = make_two_spirals(500, seed=4)
+        kp = KernelParams("rbf", gamma=16.0)
+    _, labels = np.unique(y, return_inverse=True)
+    fac = compute_factor(jnp.asarray(x, jnp.float32), kp, 128)
+    G = np.asarray(fac.G)
+    n, rank = G.shape
+    tasks, _ = build_ovo_tasks(labels, 2, 8.0)
+    cfg = SolverConfig(tol=1e-2, max_epochs=300)
+    mono = solve_batch(jnp.asarray(G), tasks, cfg)
+    tile = 96
+    scfg8 = StreamConfig(tile_rows=tile, block_dtype="int8")
+    _, s32 = solve_batch_streamed(
+        G, tasks, cfg, return_stats=True,
+        stream_config=StreamConfig(tile_rows=tile))
+    res, s8 = solve_batch_streamed(G, tasks, cfg, return_stats=True,
+                                   stream_config=scfg8)
+    assert s8.block_dtype == "int8"
+    # wire bytes: the G component of the first full pass quarters exactly,
+    # scale-table bytes INCLUDED (the per-block (ng, 2) f32 tables)
+    nb = math.ceil(n / tile)
+    eff = wire_group(tile, scfg8)
+    g32 = nb * tile * rank * 4
+    g8 = nb * (tile * rank + quant_scale_bytes(tile, eff))
+    assert s32.epoch_bytes[0] - s8.epoch_bytes[0] == g32 - g8
+    assert g32 > 3 * g8                  # >= 3x with scales counted
+    assert s8.bytes_scales > 0
+    # solution tolerance: weights, box feasibility, decisions, objective
+    w_m = np.asarray(mono.w)
+    assert np.max(np.abs(res.w - w_m)) <= 0.1 * np.max(np.abs(w_m))
+    assert (res.alpha >= 0).all()
+    assert (res.alpha <= np.asarray(tasks.c) + 1e-6).all()
+    pred_m = (G @ w_m.T)[:, 0] <= 0
+    pred_8 = (G @ res.w.T)[:, 0] <= 0
+    assert np.mean(pred_m != pred_8) <= 0.01
+    err_m = np.mean(pred_m != (labels == 1))
+    err_8 = np.mean(pred_8 != (labels == 1))
+    assert abs(err_8 - err_m) <= 0.02
+    np.testing.assert_allclose(res.dual_obj, np.asarray(mono.dual_obj),
+                               rtol=5e-3)
+    # int8 still converges below tol
+    assert (res.violation < cfg.tol).all()
+
+
+def test_int8_shrinking_consistency_and_byte_decay():
+    """Shrinking through the int8 wire: compacted cheap epochs re-encode
+    rows with their GLOBAL group scales, so the full-pass KKT check sees the
+    same perturbed problem and converges in the monolithic epoch count —
+    and the compaction still cuts per-epoch H2D bytes."""
+    G, tasks, _ = _problem(n=480)
+    cfg = SolverConfig(tol=1e-4, max_epochs=300)
+    mono = solve_batch(jnp.asarray(G), tasks, cfg)
+    res, st = solve_batch_streamed(
+        G, tasks, cfg, return_stats=True,
+        stream_config=StreamConfig(tile_rows=96, block_dtype="int8"))
+    assert (res.violation < cfg.tol).all()
+    # quantisation may cost a shrinking verification cycle (20-epoch
+    # cadence) per task, but must not stall the full-pass KKT check — the
+    # failure mode of re-grouped (inconsistent) compacted encodings is
+    # epochs pinned at max_epochs
+    assert res.epochs.max() < cfg.max_epochs
+    assert res.epochs.sum() <= np.asarray(mono.epochs).sum() \
+        + 20 * tasks.n_tasks + 8
+    assert st.full_passes >= 2 and len(st.active_history) >= 1
+    assert min(st.epoch_bytes) < st.epoch_bytes[0] / 2
+
+
+def test_int8_warm_start_parity():
+    """Warm starts (the C-grid pattern) flow through the quantised wire: the
+    init pass accumulates w0 from dequantised blocks and converges in no
+    more epochs than a cold int8 solve."""
+    G, tasks, labels = _problem(C=1.0)
+    cfg = SolverConfig(tol=1e-2, max_epochs=300)
+    scfg = StreamConfig(tile_rows=96, block_dtype="int8")
+    first = solve_batch_streamed(G, tasks, cfg, stream_config=scfg)
+    warm = [np.asarray(a) for a in np.asarray(first.alpha)]
+    tasks4, _ = build_ovo_tasks(labels, 3, 4.0, alpha0=warm)
+    res = solve_batch_streamed(G, tasks4, cfg, stream_config=scfg)
+    cold4, _ = build_ovo_tasks(labels, 3, 4.0)
+    cold = solve_batch_streamed(G, cold4, cfg, stream_config=scfg)
+    assert res.epochs.sum() <= cold.epochs.sum()
+    assert (res.violation < cfg.tol).all()
+    mono = solve_batch(jnp.asarray(G), tasks4, cfg)
+    w_m = np.asarray(mono.w)
+    assert np.max(np.abs(res.w - w_m)) <= 0.1 * np.max(np.abs(w_m))
+
+
+def test_int8_wire_never_ships_f32_blocks(monkeypatch):
+    """Every 2-D H2D block put on the int8 wire is int8 values or an (ng, 2)
+    scale table — no fp32 G block ever crosses the bus."""
+    G, tasks, _ = _problem()
+    cfg = SolverConfig(tol=1e-2, max_epochs=60)
+    puts = []
+    orig = ss._put
+
+    def spy(a, device=None):
+        puts.append((np.shape(a), np.asarray(a).dtype))
+        return orig(a, device)
+
+    monkeypatch.setattr(ss, "_put", spy)
+    solve_batch_streamed(G, tasks, cfg,
+                         stream_config=StreamConfig(tile_rows=96,
+                                                    block_dtype="int8"))
+    two_d = [(s, dt) for s, dt in puts if len(s) == 2]
+    assert two_d
+    for shape, dt in two_d:
+        assert dt == np.int8 or shape[1] == 2, (shape, dt)
+
+
 # ------------------------------------------------------------- budget model
 
 def test_stage2_memory_model_accounting():
@@ -282,6 +407,37 @@ def test_cross_validate_routes_streamed():
                                      stream_config=tiny)
     assert fac.streamed
     assert abs(err_plain - err_stream) < 1e-6
+
+
+def test_polish_final_level_streams_int8():
+    """`solve_polished` threads the quantised wire into its routed FINAL
+    level: a forced-stream polish with `block_dtype="int8"` records int8
+    stream stats and still matches the plain polished fit's predictions."""
+    from repro.core import make_schedule, solve_polished
+    x, y = make_multiclass(400, p=6, n_classes=3, seed=5)
+    _, labels = np.unique(y, return_inverse=True)
+    fac = compute_factor(jnp.asarray(x, jnp.float32), KP, 64)
+    tasks, _ = build_ovo_tasks(labels, 3, 4.0)
+    cfg = SolverConfig(tol=1e-2, max_epochs=300)
+    sched = make_schedule(levels=2)
+    res_plain = solve_polished(fac, tasks, cfg, sched)
+    fac_host = type(fac)(G=np.asarray(fac.G), landmarks=fac.landmarks,
+                         projector=fac.projector, eigvals=fac.eigvals,
+                         effective_rank=fac.effective_rank, kernel=fac.kernel,
+                         streamed=True)
+    res8, trace = solve_polished(
+        fac_host, tasks, cfg, sched, stream=True,
+        stream_config=StreamConfig(tile_rows=96, block_dtype="int8"),
+        return_trace=True)
+    assert trace.final.streamed
+    assert trace.final.stream_stats.block_dtype == "int8"
+    assert trace.final.stream_stats.bytes_scales > 0
+    G = np.asarray(fac.G)
+    from repro.core.ovo import class_pairs, ovo_vote
+    pairs = class_pairs(3)
+    v_plain = ovo_vote(G @ np.asarray(res_plain.w).T, pairs, 3)
+    v8 = ovo_vote(G @ np.asarray(res8.w).T, pairs, 3)
+    assert np.mean(v_plain == v8) >= 0.99
 
 
 def test_streamed_mesh_single_device_matches():

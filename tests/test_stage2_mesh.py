@@ -137,7 +137,13 @@ def test_stream_config_validation():
         StreamConfig(block_dtype="fp8")
     with pytest.raises(ValueError):
         StreamConfig(prefetch_cap=0)
+    with pytest.raises(ValueError):
+        StreamConfig(stage1_dtype="bf16")   # stage-1 wire is f32 or int8
+    with pytest.raises(ValueError):
+        StreamConfig(quant_group_rows=0)
     StreamConfig(block_dtype="bf16")    # valid
+    StreamConfig(block_dtype="int8", stage1_dtype="int8",
+                 quant_group_rows=8)    # valid
 
 
 # ------------------------------------------------- single-device fallback
@@ -284,4 +290,61 @@ assert s32.epoch_bytes[0] - sbf.epoch_bytes[0] == g32 // 2, \
 d32 = G @ r32.w.T; dbf = G @ rbf.w.T
 assert np.mean(np.sign(d32) == np.sign(dbf)) > 0.98
 print("BF16-MESH-OK")
+""", n_dev=2)
+
+
+def test_int8_farm_bytes_quarter_and_device_invariance_on_2_devices():
+    """int8 wire blocks through the OVERLAPPED farm: the shared-reader G
+    bytes quarter relative to f32 (scale tables included, exact byte model),
+    and per-pass `bytes_h2d` stays INDEPENDENT of device count — the
+    acceptance invariant for `block_dtype="int8"`."""
+    run_sub(r"""
+import math
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import (KernelParams, SolverConfig, StreamConfig,
+                        compute_factor, solve_batch_streamed,
+                        solve_tasks_streamed, wire_group)
+from repro.core.quant import quant_scale_bytes
+from repro.core.ovo import build_ovo_tasks
+from repro.data import make_multiclass
+
+x, y = make_multiclass(300, p=6, n_classes=3, seed=2)
+_, labels = np.unique(y, return_inverse=True)
+fac = compute_factor(jnp.asarray(x, jnp.float32),
+                     KernelParams("rbf", gamma=0.25), 64)
+G = np.asarray(fac.G)
+n, rank = G.shape
+tasks, _ = build_ovo_tasks(labels, 3, 4.0)
+cfg = SolverConfig(tol=1e-2, max_epochs=200)
+devs = jax.local_devices()
+assert len(devs) == 2
+tile = 96
+scfg8 = StreamConfig(tile_rows=tile, block_dtype="int8")
+r32, s32 = solve_tasks_streamed(
+    G, tasks, cfg, devices=devs, return_stats=True,
+    stream_config=StreamConfig(tile_rows=tile))
+r8, s8 = solve_tasks_streamed(
+    G, tasks, cfg, devices=devs, return_stats=True, stream_config=scfg8)
+nb = math.ceil(n / tile)
+eff = wire_group(tile, scfg8)
+g32 = nb * tile * rank * 4
+g8 = nb * (tile * rank + quant_scale_bytes(tile, eff))
+assert s32.epoch_bytes[0] - s8.epoch_bytes[0] == g32 - g8, \
+    (s32.epoch_bytes[0], s8.epoch_bytes[0], g32, g8)
+assert g32 > 3 * g8
+assert s8.bytes_scales > 0
+# device-count byte invariance: the farm's first-full-pass bytes equal the
+# SINGLE-device figure exactly — G is staged/quantised once per pass
+_, s8_1 = solve_batch_streamed(G, tasks, cfg, stream_config=scfg8,
+                               return_stats=True)
+assert s8.epoch_bytes[0] == s8_1.epoch_bytes[0], \
+    (s8.epoch_bytes[0], s8_1.epoch_bytes[0])
+# predictions stay aligned despite the quantised wire format (raw OVO
+# values flip only near zero, where the vote does not care)
+from repro.core.ovo import ovo_vote, class_pairs
+d32 = G @ r32.w.T; d8 = G @ r8.w.T
+pairs = class_pairs(3)
+assert np.mean(ovo_vote(d32, pairs, 3) == ovo_vote(d8, pairs, 3)) >= 0.99
+assert np.mean(np.sign(d32) == np.sign(d8)) > 0.95
+print("INT8-MESH-OK")
 """, n_dev=2)

@@ -74,6 +74,119 @@ def test_pallas_gram_fn_streams():
                                rtol=2e-4, atol=2e-4)
 
 
+# ----------------------------------------------------------- int8 wire chunks
+
+def test_int8_chunks_quarter_bytes_and_stay_close():
+    """`StreamConfig.stage1_dtype="int8"`: chunk H2D bytes quarter (scales
+    included, exact byte model) and the factor stays within the codec's
+    error bound of the f32 streamed factor."""
+    from repro.core.quant import quant_bytes
+    x = _data(700, p=9)
+    cfg32 = StreamConfig(chunk_rows=128)
+    cfg8 = StreamConfig(chunk_rows=128, stage1_dtype="int8")
+    s32 = compute_factor_streamed(x, KP, 64, config=cfg32)
+    s8 = compute_factor_streamed(x, KP, 64, config=cfg8)
+    st32, st8 = s32.stage1_stats, s8.stage1_stats
+    assert st32.wire_dtype == "f32" and st8.wire_dtype == "int8"
+    assert st32.bytes_h2d == 700 * 9 * 4
+    expected = sum(quant_bytes(min(128, 700 - s), 9, cfg8.quant_group_rows)
+                   for s in range(0, 700, 128))
+    assert st8.bytes_h2d == expected
+    assert st8.bytes_scales > 0
+    assert st32.bytes_h2d > 3 * st8.bytes_h2d          # >= 3x incl. scales
+    # parity: the kernel epilogue contracts the quantisation noise; the
+    # factor stays close to the exact streamed one
+    assert np.abs(s8.G - s32.G).max() < 0.05
+    assert np.abs(s8.G - s32.G).mean() < 0.005
+    assert s8.effective_rank == s32.effective_rank
+
+
+def test_int8_chunks_through_fit():
+    """End-to-end: an LPDSVM fit with a quantised stage-1 wire classifies
+    like the f32 fit (both stages streamed)."""
+    x = _data(600, p=6, seed=1)
+    y = (x[:, 0] * x[:, 1] > 0).astype(int)
+    kp = KernelParams("rbf", gamma=1.0)
+    plain = LPDSVM(kp, C=2.0, budget=96).fit(x, y)
+    cfg = StreamConfig(device_budget_bytes=256 << 10, stage1_dtype="int8",
+                       block_dtype="int8")
+    svm = LPDSVM(kp, C=2.0, budget=96, stream_config=cfg).fit(x, y)
+    assert svm.stats.stage1_streamed and svm.stats.stage2_streamed
+    assert svm.stats.stage1_stats is not None
+    assert svm.stats.stage1_stats.wire_dtype == "int8"
+    assert svm.stats.stage2_stats.block_dtype == "int8"
+    assert abs(svm.score(x, y) - plain.score(x, y)) <= 0.02
+
+
+def test_int8_gram_q8_fn_injectable():
+    """The Pallas fused-dequant kernel slots in as gram_q8_fn (interpret
+    off-TPU), matching the jnp dequant oracle path."""
+    from repro.core.streaming import stream_factor_blocks
+    from repro.kernels import ops
+    x = _data(140, p=5)
+    fac = compute_factor(x, KP, 48)
+
+    def pallas_q8(v, s, z, params, group):
+        return ops.gram_q8(v, s, z, params, group=group, tn=32, tm=16, tp=8,
+                           interpret=True)
+
+    blocks = (x[s:s + 33] for s in range(0, 140, 33))
+    out = stream_factor_blocks(
+        blocks, 140, fac.landmarks, fac.projector, KP, wire_dtype="int8",
+        gram_q8_fn=pallas_q8)
+    oracle = stream_factor_rows(x, fac.landmarks, fac.projector, KP,
+                                chunk_rows=33, wire_dtype="int8")
+    np.testing.assert_allclose(out, oracle, rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------- stage-1 autotune
+
+def test_stage1_autotune_plumbing(monkeypatch):
+    """`tune_prefetch` is applied ONCE, after the first full pipeline
+    window, and the tuned depth surfaces in the stats (ROADMAP stage-1
+    overlap item)."""
+    import repro.core.streaming as streaming
+    calls = []
+
+    def fake_tune(put, drain, prefetch, cap):
+        calls.append((prefetch, cap))
+        return 5
+
+    monkeypatch.setattr(streaming, "tune_prefetch", fake_tune)
+    x = _data(900)
+    fac = compute_factor(x, KP, 32)
+    from repro.core.streaming import Stage1StreamStats, stream_factor_rows
+    st = Stage1StreamStats()
+    out = stream_factor_rows(x, fac.landmarks, fac.projector, KP,
+                             chunk_rows=64, prefetch=2,
+                             autotune_prefetch=True, prefetch_cap=6,
+                             stats=st)
+    assert calls == [(2, 6)]
+    assert st.prefetch_final == 5
+    np.testing.assert_allclose(out, np.asarray(fac.G), rtol=1e-5, atol=1e-5)
+    # disabled: depth untouched
+    calls.clear()
+    st2 = Stage1StreamStats()
+    stream_factor_rows(x, fac.landmarks, fac.projector, KP,
+                       chunk_rows=64, prefetch=3, stats=st2)
+    assert not calls and st2.prefetch_final == 3
+
+
+def test_stage1_autotune_routed_from_config():
+    """`compute_factor_streamed` threads the config's autotune knobs through
+    and records the chunk traffic on the factor."""
+    x = _data(800)
+    cfg = StreamConfig(chunk_rows=64, autotune_prefetch=True, prefetch_cap=4)
+    fac = compute_factor_streamed(x, KP, 48, config=cfg)
+    st = fac.stage1_stats
+    assert st is not None and st.chunks == -(-800 // 64)
+    assert st.rows == 800
+    assert 2 <= st.prefetch_final <= 4     # tuned within [prefetch, cap]
+    off = StreamConfig(chunk_rows=64, autotune_prefetch=False)
+    st_off = compute_factor_streamed(x, KP, 48, config=off).stage1_stats
+    assert st_off.prefetch_final == off.prefetch
+
+
 # ------------------------------------------------------------- budget model
 
 def test_memory_model_accounting():
