@@ -1,6 +1,7 @@
 # One-word entry points for the verify / bench / lint loops.
 #
 #   make test        tier-1 suite (the invocation ROADMAP.md pins)
+#   make test-mesh   multi-device suites under 4 forced host devices
 #   make bench       out-of-core + mesh-farm + polish curves ->
 #                    BENCH_streaming.json + BENCH_stage2_stream.json +
 #                    BENCH_stage2_mesh.json + BENCH_polish.json
@@ -14,10 +15,16 @@
 PY       ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-smoke bench-all lint
+.PHONY: test test-mesh bench bench-smoke bench-all lint
 
 test:
 	$(PY) -m pytest -x -q
+
+# The subprocess helpers inside these files force their own child device
+# counts; the env var here additionally multi-devices the in-process parts.
+test-mesh:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	$(PY) -m pytest -x -q tests/test_stage2_mesh.py tests/test_block_cache.py
 
 bench:
 	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish

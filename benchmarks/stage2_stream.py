@@ -7,7 +7,10 @@ For each problem size the same (G, TaskBatch) pair is solved by
 reporting coordinate visits/second and — the point of the exercise — the H2D
 bytes streamed per epoch, which drop as shrinking compacts the active-row
 union (the paper's "memory demand for the relevant sub-matrix of G reduces",
-turned into bandwidth savings).  The full record set is written to
+turned into bandwidth savings).  Each streamed configuration runs twice, with
+the hot-row HBM block cache on (the default) and off, so the record set shows
+how many of those compacted-epoch bytes stop crossing the wire at all once
+the active set is pinned device-side.  The full record set is written to
 ``BENCH_stage2_stream.json`` for the BENCH trajectory.
 
     PYTHONPATH=src python -m benchmarks.run stage2
@@ -75,54 +78,89 @@ def run() -> None:
                 continue
             pass0 = None                       # f32 first-full-pass bytes
             for dtype in DTYPES:
-                cfg = StreamConfig(tile_rows=tile, block_dtype=dtype)
-                holder = {}
+                nocache_h2d = None
+                for cached in (False, True):   # uncached first = the baseline
+                    cfg = StreamConfig(tile_rows=tile, block_dtype=dtype,
+                                       cache_blocks=cached)
+                    holder = {}
 
-                def streamed():
-                    holder["st"] = solve_batch_streamed(
-                        G, tasks, CONFIG, stream_config=cfg,
-                        return_stats=True)[1]
+                    def streamed():
+                        holder["st"] = solve_batch_streamed(
+                            G, tasks, CONFIG, stream_config=cfg,
+                            return_stats=True)[1]
 
-                # warmup (jit compile) + ONE timed run whose stats we keep —
-                # a full solve is already minutes of dispatch at these sizes
-                t = timeit(streamed, repeats=1)
-                st = holder["st"]
-                # every kernel call sweeps one (tile,) block for one task, so
-                # this matches the monolithic epochs.sum() * n visit count
-                # (modulo tail-block padding)
-                visits = st.kernel_calls * st.tile_rows
-                # effective host->device throughput: physical DMA bytes over
-                # the host time spent inside puts (the quantised wire's
-                # point: same rows, fewer bytes, higher effective rows/s)
-                gbps = st.bytes_put / max(st.put_seconds, 1e-9) / 1e9
-                emit(f"stage2_stream_n{n}_B{rank}_t{tile}_{dtype}", t * 1e6,
-                     f"{visits / t:.0f} visits/s "
-                     f"{st.bytes_h2d / 2**20:.1f}MiB h2d {gbps:.2f}GB/s")
-                records.append({"mode": "streamed", "n": n, "rank": rank,
-                                "n_tasks": tasks.n_tasks, "tile_rows": tile,
-                                "dtype": dtype,
-                                "seconds": t, "visits_per_s": visits / t,
-                                "bytes_h2d": st.bytes_h2d,
-                                "bytes_scales": st.bytes_scales,
-                                "bytes_d2h": st.bytes_d2h,
-                                "h2d_gbps": gbps,
-                                "epochs": st.epochs,
-                                "full_passes": st.full_passes,
-                                "epoch_bytes": st.epoch_bytes,
-                                "active_history": st.active_history})
-                # shrinking must turn into bandwidth savings: compare the
-                # first (uncompacted) epoch's H2D bytes with the cheapest
-                # later epoch
-                if st.epoch_bytes:
-                    first, floor = st.epoch_bytes[0], min(st.epoch_bytes)
-                    emit(f"stage2_shrink_bytes_n{n}_t{tile}_{dtype}", 0.0,
-                         f"{first / max(floor, 1):.1f}x epoch-byte reduction")
-                    if dtype == "f32":
-                        pass0 = first
-                    elif pass0 is not None:
-                        emit(f"stage2_wire_bytes_n{n}_t{tile}_{dtype}", 0.0,
-                             f"{pass0 / max(first, 1):.2f}x per-pass byte "
-                             f"reduction vs f32")
+                    # warmup (jit compile) + ONE timed run whose stats we
+                    # keep — a full solve is already minutes of dispatch at
+                    # these sizes
+                    t = timeit(streamed, repeats=1)
+                    st = holder["st"]
+                    # every kernel call sweeps one (tile,) block for one
+                    # task, so this matches the monolithic epochs.sum() * n
+                    # visit count (modulo tail-block padding)
+                    visits = st.kernel_calls * st.tile_rows
+                    # effective host->device throughput: physical DMA bytes
+                    # over the host time spent inside puts (the quantised
+                    # wire's point: same rows, fewer bytes, higher effective
+                    # rows/s)
+                    gbps = st.bytes_put / max(st.put_seconds, 1e-9) / 1e9
+                    tag = "cached" if cached else "nocache"
+                    emit(f"stage2_stream_n{n}_B{rank}_t{tile}_{dtype}_{tag}",
+                         t * 1e6,
+                         f"{visits / t:.0f} visits/s "
+                         f"{st.bytes_h2d / 2**20:.1f}MiB h2d {gbps:.2f}GB/s")
+                    records.append({"mode": "streamed", "n": n, "rank": rank,
+                                    "n_tasks": tasks.n_tasks,
+                                    "tile_rows": tile,
+                                    "dtype": dtype, "cache": cached,
+                                    "seconds": t, "visits_per_s": visits / t,
+                                    "bytes_h2d": st.bytes_h2d,
+                                    "bytes_scales": st.bytes_scales,
+                                    "bytes_d2h": st.bytes_d2h,
+                                    "bytes_hit": st.bytes_hit,
+                                    "bytes_miss": st.bytes_miss,
+                                    "cache_resident_bytes":
+                                        st.cache_resident_bytes,
+                                    "h2d_gbps": gbps,
+                                    "epochs": st.epochs,
+                                    "full_passes": st.full_passes,
+                                    "epoch_bytes": st.epoch_bytes,
+                                    "epoch_hit_bytes": st.epoch_hit_bytes,
+                                    "epoch_miss_bytes": st.epoch_miss_bytes,
+                                    "active_history": st.active_history})
+                    if not cached:
+                        nocache_h2d = st.bytes_h2d
+                        continue
+                    # the cache's headline: compacted-epoch G bytes served
+                    # from HBM instead of the wire, and the resulting total
+                    # H2D drop vs the identical uncached solve
+                    served = st.bytes_hit + st.bytes_miss
+                    if served:
+                        emit(f"stage2_cache_hits_n{n}_t{tile}_{dtype}", 0.0,
+                             f"{st.bytes_hit / served:.1%} of compacted-"
+                             f"epoch G bytes from HBM cache "
+                             f"({st.cache_resident_bytes / 2**20:.1f}MiB "
+                             f"resident)")
+                    if nocache_h2d:
+                        emit(f"stage2_cache_h2d_n{n}_t{tile}_{dtype}", 0.0,
+                             f"{nocache_h2d / max(st.bytes_h2d, 1):.2f}x "
+                             f"total H2D reduction vs uncached")
+                    # shrinking must turn into bandwidth savings: compare
+                    # the first (uncompacted) epoch's H2D bytes with the
+                    # cheapest later epoch
+                    if st.epoch_bytes:
+                        first = st.epoch_bytes[0]
+                        floor = min(st.epoch_bytes)
+                        emit(f"stage2_shrink_bytes_n{n}_t{tile}_{dtype}",
+                             0.0,
+                             f"{first / max(floor, 1):.1f}x epoch-byte "
+                             f"reduction")
+                        if dtype == "f32":
+                            pass0 = first
+                        elif pass0 is not None:
+                            emit(f"stage2_wire_bytes_n{n}_t{tile}_{dtype}",
+                                 0.0,
+                                 f"{pass0 / max(first, 1):.2f}x per-pass "
+                                 f"byte reduction vs f32")
 
     payload = {"benchmark": "stage2_streaming",
                "backend": jax.default_backend(),

@@ -1,4 +1,7 @@
 """LPD-SVM core: the paper's contribution as a composable JAX module."""
+from repro.core.block_cache import (HotRowBlockCache, block_key,
+                                    stage2_cache_budget,
+                                    violation_recency_scores)
 from repro.core.kernel_fn import KernelParams, gram, kernel_diag, median_gamma
 from repro.core.nystrom import LowRankFactor, compute_factor, select_landmarks
 from repro.core.dual_solver import (SolverConfig, TaskBatch, SolveResult,
@@ -27,6 +30,8 @@ from repro.core.streaming import (Stage1StreamStats, StreamConfig,
                                   stream_factor_blocks, stream_factor_rows)
 
 __all__ = [
+    "HotRowBlockCache", "block_key", "stage2_cache_budget",
+    "violation_recency_scores",
     "KernelParams", "gram", "kernel_diag", "median_gamma",
     "LowRankFactor", "compute_factor", "select_landmarks",
     "SolverConfig", "TaskBatch", "SolveResult", "solve_one", "solve_batch",

@@ -1,0 +1,209 @@
+"""Device-resident hot-row block cache for streamed stage 2.
+
+The paper's recipe makes stage-2 row access *skewed*: after a few passes of
+adaptive shrinking the active set is small and stable, yet the streamed
+solver still re-ships every active row over H2D each cheap epoch.  This
+module is the missing memory-hierarchy tier (disk -> host RAM -> wire ->
+**HBM cache**): the shrinking-compacted active-row union is pinned
+device-side under the unused remainder of `StreamConfig.device_budget_bytes`,
+cheap epochs consult the cache before shipping, and only misses cross the
+bus — so cheap epochs become cache-hit epochs with ~zero G H2D.
+
+Correctness is *byte-exact and trajectory-exact by construction*: a cache
+entry stores the exact device arrays the H2D put produced — the f32 block,
+the bf16 block (upcast per use), or the int8 `QuantBlock` values + its
+global-row-aligned scale table (dequantised per use, still fused) — so a
+cached row decodes bit-identically to a streamed one.  PR 5's global group
+scales are what make the int8 tier safe: the cached codes were encoded
+against the same global stats every shared-pass block uses, so hit and miss
+epochs optimise ONE consistent problem.
+
+Eviction is by **violation recency**: when the union does not fit the cache
+budget, blocks whose rows most recently violated KKT (smallest `unchanged`
+counters — the rows the solver will revisit soonest) are pinned first and
+the cold tail keeps streaming.  The pin plan is recomputed at every
+shrinking compaction (`plan`), which is also the invalidation point: entries
+whose row set no longer appears in the compacted block list are dropped.
+Because keys are content-addressed by the global row ids in the block, a
+*stable* active set re-pins its existing entries across compactions for
+free — no re-ship on re-compaction.
+
+The cache is deliberately payload-agnostic (entries carry opaque device
+payloads plus their wire byte size), so its planning/eviction logic is pure
+host bookkeeping, property-testable without a device
+(`tests/test_property.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.streaming import BYTES_F32, StreamConfig
+
+
+def block_key(rows: np.ndarray, wire: str) -> bytes:
+    """Content-addressed cache key of one compacted block: the GLOBAL row
+    ids it carries plus the wire dtype (an f32 and an int8 encoding of the
+    same rows are different device payloads).  Stable across compactions
+    whenever the union slices into the same tile groups."""
+    return wire.encode() + b"|" + np.ascontiguousarray(rows, np.int64).tobytes()
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One pinned block: opaque device payload + the wire bytes it replaces.
+
+    ``payload`` is whatever the engine's decode step consumes — a device f32
+    or bf16 array, or an (int8 values, (ng, 2) scales, group) triple for the
+    quantised wire.  ``nbytes`` is the block's WIRE size (== its device
+    residency for every supported format), the quantity both the budget
+    check and the hit/miss byte accounting use."""
+
+    payload: object
+    nbytes: int
+
+
+class HotRowBlockCache:
+    """HBM block cache with violation-recency pinning.
+
+    Lifecycle per shrinking compaction:
+
+      1. `plan(keys, nbytes, scores)` — rank the compacted blocks by
+         violation recency (ascending score = most recently violated
+         first), pin greedily under ``budget_bytes``, evict entries that
+         fell out of the plan.  Surviving entries keep their device arrays:
+         a stable active set costs zero re-ship.
+      2. cheap epochs call `lookup(key)` per block — a hit returns the
+         pinned entry (zero H2D), a miss streams the block and `put`s the
+         payload if the plan wants it.
+
+    Invariants (property-tested): resident bytes never exceed the budget,
+    and the hit set is always a subset of the planned pin set.
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget = max(0, int(budget_bytes))
+        self._entries: Dict[bytes, CacheEntry] = {}
+        self._pinned: set = set()
+        self.resident_bytes = 0
+        self.peak_resident_bytes = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------- planning
+    def plan(self, keys: Sequence[bytes], nbytes: Sequence[int],
+             scores: Sequence[float]) -> set:
+        """Recompute the pin set for a new compaction and evict stale
+        entries.  Blocks are pinned in ascending ``scores`` order (violation
+        recency: lower = more recently violated) until the cumulative wire
+        bytes would exceed the budget; ties break on block order, so the
+        plan is deterministic.  Returns the planned key set."""
+        order = np.argsort(np.asarray(scores, np.float64), kind="stable")
+        pinned: set = set()
+        total = 0
+        for i in order:
+            nb = int(nbytes[i])
+            if total + nb <= self.budget:
+                pinned.add(keys[i])
+                total += nb
+        self._pinned = pinned
+        for key in [k for k in self._entries if k not in pinned]:
+            self.resident_bytes -= self._entries.pop(key).nbytes
+            self.evictions += 1
+        return pinned
+
+    def invalidate(self) -> None:
+        """Drop everything (the union grew back to the full row set, or the
+        solve is re-compacting from scratch)."""
+        self.plan([], [], [])
+
+    # ------------------------------------------------------------ hit / miss
+    def lookup(self, key: bytes) -> Optional[CacheEntry]:
+        return self._entries.get(key)
+
+    def put(self, key: bytes, payload: object, nbytes: int) -> bool:
+        """Pin a block's device payload if the current plan wants it and it
+        fits; returns True when stored.  A double `put` of the same key is
+        a no-op (the first payload wins — both decode identically)."""
+        if key not in self._pinned or key in self._entries:
+            return False
+        if self.resident_bytes + nbytes > self.budget:
+            return False
+        self._entries[key] = CacheEntry(payload=payload, nbytes=int(nbytes))
+        self.resident_bytes += int(nbytes)
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self.resident_bytes)
+        return True
+
+    # ----------------------------------------------------------- observability
+    @property
+    def n_entries(self) -> int:
+        return len(self._entries)
+
+    @property
+    def planned_keys(self) -> set:
+        return set(self._pinned)
+
+    def planned_fraction(self, keys: Sequence[bytes],
+                         nbytes: Sequence[int]) -> float:
+        """Fraction of the given blocks' wire bytes the current plan pins —
+        the projected cheap-epoch hit rate once the cache is warm.  Drives
+        the prefetch clamp: a majority-hit epoch needs no deeper H2D queue."""
+        total = int(np.sum(np.asarray(nbytes, np.int64))) if len(nbytes) else 0
+        if total == 0:
+            return 0.0
+        hit = sum(int(nb) for k, nb in zip(keys, nbytes) if k in self._pinned)
+        return hit / total
+
+
+def violation_recency_scores(union: np.ndarray, tile: int,
+                             unchanged: np.ndarray,
+                             active_masks: np.ndarray) -> List[float]:
+    """Per-block violation-recency score over a compacted union.
+
+    ``unchanged`` is the (T_live, n) counter matrix (0 = the row's alpha
+    moved this epoch); ``active_masks`` the (T_live, n) activity masks the
+    compaction derived the union from.  A row's recency is its smallest
+    counter over the tasks it is active for; a block scores the MINIMUM of
+    its rows — one hot row keeps the whole block pinned, matching the
+    all-tasks-per-block streaming granularity.  Lower = hotter."""
+    if len(union) == 0:
+        return []
+    u = np.where(active_masks[:, union], unchanged[:, union],
+                 np.iinfo(np.int64).max).min(axis=0)
+    return [float(u[s:s + tile].min()) for s in range(0, len(union), tile)]
+
+
+def stage2_cache_budget(rank: int, n_tasks: int, tile: int,
+                        prefetch: int, cfg: StreamConfig) -> int:
+    """Cache byte budget for one engine: an explicit
+    `StreamConfig.cache_budget_bytes`, else the unused remainder of
+    `device_budget_bytes` after the resident per-task weights and the
+    `prefetch`-deep in-flight block working set are carved out (the "more
+    RAM" the budget model was leaving on the table).  Zero when caching is
+    disabled."""
+    from repro.core.solver_stream import (stage2_block_bytes,
+                                          stage2_resident_bytes)
+
+    if not cfg.cache_blocks:
+        return 0
+    if cfg.cache_budget_bytes is not None:
+        return max(0, int(cfg.cache_budget_bytes))
+    rem = (cfg.device_budget_bytes
+           - stage2_resident_bytes(rank, n_tasks)
+           - max(1, prefetch) * stage2_block_bytes(tile, rank, n_tasks))
+    return max(0, int(rem))
+
+
+def block_wire_nbytes(tile: int, rank: int, wire: str, group: int) -> int:
+    """Wire (== cached-device) bytes of one padded (tile, rank) block in the
+    given format — the byte model `auto_tile_rows` and the tests share."""
+    from repro.core.quant import quant_scale_bytes
+
+    if wire == "bf16":
+        return tile * rank * (BYTES_F32 // 2)
+    if wire == "int8":
+        # compacted blocks carry per-ROW scale entries (group=1 gathers)
+        return tile * rank + quant_scale_bytes(tile, 1)
+    return tile * rank * BYTES_F32

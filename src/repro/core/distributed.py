@@ -212,6 +212,13 @@ def solve_tasks_streamed(
     so one fat OVO pair cannot serialise the farm.  Like
     `stream_factor_over_mesh` this is per-host — a multi-host mesh runs one
     call per process on its local task share (ROADMAP item).
+
+    Each engine owns a PER-DEVICE hot-row block cache (`core/block_cache.py`)
+    over its shard's compacted active-row union — unions are shard-local, so
+    pinning is too, and warm compacted cheap epochs run with ~zero G H2D on
+    every device at once.  Shared full passes never consult the caches: the
+    one-read-per-pass reader invariant (per-pass `bytes_h2d` independent of
+    device count) is untouched by caching.
     """
     from repro.core.solver_stream import (StreamConfig, _Stage2Engine,
                                           auto_tile_rows, default_epoch_fn,

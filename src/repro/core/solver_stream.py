@@ -72,6 +72,9 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 
+from repro.core.block_cache import (HotRowBlockCache, block_key,
+                                    stage2_cache_budget,
+                                    violation_recency_scores)
 from repro.core.dual_solver import (DELTA_EPS, Q_FLOOR, SolveResult,
                                     SolverConfig, TaskBatch)
 from repro.core.quant import (GROUP_ROWS, QuantBlock, dequant_rows,
@@ -132,11 +135,17 @@ def auto_tile_rows(n: int, rank: int, n_tasks: int, cfg: StreamConfig) -> int:
 
     Solves  prefetch * stage2_block_bytes(t) + resident <= budget  for t,
     floored at `min_chunk_rows` (tiny budgets should not degenerate into
-    per-row dispatch) and rounded up to a multiple of 8.
+    per-row dispatch) and rounded up to a multiple of 8.  An EXPLICIT
+    `cache_budget_bytes` is carved out of the free bytes first — that HBM is
+    promised to the hot-row block cache; the default derived cache budget is
+    *defined* as whatever this model leaves over (`stage2_cache_budget`), so
+    it never shrinks the tile.
     """
     if cfg.tile_rows is not None:
         return max(8, -(-min(cfg.tile_rows, n) // 8) * 8)
     free = cfg.device_budget_bytes - stage2_resident_bytes(rank, n_tasks)
+    if cfg.cache_blocks and cfg.cache_budget_bytes:
+        free -= cfg.cache_budget_bytes
     per_row = cfg.prefetch * (rank + 7 * n_tasks) * BYTES_F32
     rows = (free // per_row) // 8 * 8 if free > 0 else 0   # round down: budget
     return int(min(-(-n // 8) * 8, max(cfg.min_chunk_rows, rows, 8)))
@@ -288,6 +297,24 @@ class Stage2StreamStats:
     active_history: List[int] = dataclasses.field(default_factory=list)
     # ^ per compaction: active-row union size (single device) / total rows
     #   streamed per cheap epoch across shards (mesh — unions may overlap)
+    # HBM block-cache accounting.  Every compacted cheap-epoch G block lands
+    # in exactly ONE of hit/miss: `bytes_miss` is what crossed the bus
+    # (already inside `bytes_h2d`), `bytes_hit` is what the pinned union
+    # served device-side instead.  With caching off every compacted block is
+    # a miss, so cached.bytes_hit + cached.bytes_miss == uncached.bytes_miss
+    # and cached.bytes_h2d == uncached.bytes_h2d - cached.bytes_hit — the
+    # exact identities tests/test_block_cache.py asserts.
+    bytes_hit: int = 0                # cache-served G bytes (zero H2D)
+    bytes_miss: int = 0               # compacted cheap-epoch G bytes shipped
+    cache_hits: int = 0               # block-granular counters of the same
+    cache_misses: int = 0
+    cache_evictions: int = 0
+    cache_resident_bytes: int = 0     # peak pinned HBM bytes (sum over
+                                      # devices on a farm)
+    epoch_hit_bytes: List[int] = dataclasses.field(default_factory=list)
+    epoch_miss_bytes: List[int] = dataclasses.field(default_factory=list)
+    # ^ per-epoch hit/miss deltas, index-aligned with `epoch_bytes`, so
+    #   benchmarks plot byte decay vs hit-rate without re-deriving it
     seconds: float = 0.0
     block_dtype: str = "f32"
     n_devices: int = 1
@@ -296,6 +323,13 @@ class Stage2StreamStats:
     drain_seconds: float = 0.0        # host time blocked on result fetches
     prefetch_final: int = 0           # queue depth after autotune
     per_device: Optional[List["Stage2StreamStats"]] = None
+
+    @property
+    def epoch_hit_rate(self) -> List[float]:
+        """Per-epoch cache-hit fraction of compacted G bytes (0.0 for epochs
+        with no compacted traffic, e.g. full passes)."""
+        return [h / (h + m) if h + m else 0.0
+                for h, m in zip(self.epoch_hit_bytes, self.epoch_miss_bytes)]
 
 
 class _PadStage:
@@ -504,6 +538,15 @@ class _Stage2Engine:
         self._stage = _PadStage(tile, rank, cfg.block_dtype)
         # ^ engine-local reusable pad buffer for compacted cheap epochs (the
         #   engine's block loop is sequential, so reuse is safe)
+        self.cache = (HotRowBlockCache(
+            stage2_cache_budget(rank, T, tile, cfg.prefetch, cfg))
+            if cfg.cache_blocks else None)
+        # ^ per-engine (hence per-device on a farm) HBM block cache over the
+        #   compacted active-row union; shared passes never touch it, so the
+        #   device-count-independent shared-reader byte invariant survives
+        self._act_keys: Optional[List[bytes]] = None
+        self._act_sizes: Optional[List[int]] = None
+        self._hit_mark = self._miss_mark = 0
         self._warm = [t for t in range(T) if self.a_g[t].any()]
         self._epoch = -1
         self._epoch_mark = 0
@@ -525,10 +568,16 @@ class _Stage2Engine:
     def start_epoch(self, epoch: int) -> None:
         self._epoch = epoch
         self._epoch_mark = self.stats.bytes_h2d
+        self._hit_mark = self.stats.bytes_hit
+        self._miss_mark = self.stats.bytes_miss
 
     def finish_epoch(self, epoch: int) -> None:
         self.epochs_run = epoch + 1
         self.stats.epoch_bytes.append(self.stats.bytes_h2d - self._epoch_mark)
+        self.stats.epoch_hit_bytes.append(self.stats.bytes_hit
+                                          - self._hit_mark)
+        self.stats.epoch_miss_bytes.append(self.stats.bytes_miss
+                                           - self._miss_mark)
 
     def autotune(self, cap: int) -> None:
         """Close the overlap loop from the FIRST full pass's measured rates:
@@ -542,6 +591,13 @@ class _Stage2Engine:
         per_block = stage2_block_bytes(self.tile, self.rank, self.T)
         fit = free // per_block if per_block > 0 else cap
         cap = max(self.pipe.prefetch, min(cap, int(fit)))
+        if (self.cache is not None and self._act_keys is not None
+                and self.cache.planned_fraction(self._act_keys,
+                                                self._act_sizes) > 0.5):
+            # The epochs this tune governs are majority cache-hit: most
+            # blocks never cross the bus, so a deeper H2D queue buys nothing
+            # and only holds extra HBM — keep the depth where it is.
+            cap = self.pipe.prefetch
         put = self.stats.put_seconds - self._put_mark
         drain = self.stats.drain_seconds - self._drain_mark
         self.pipe.prefetch = tune_prefetch(put, drain, self.pipe.prefetch,
@@ -560,7 +616,7 @@ class _Stage2Engine:
         self._put_mark = self.stats.put_seconds
         self._drain_mark = self.stats.drain_seconds
 
-    def _put_block(self, gb_send):
+    def _put_block(self, gb_send, cache_key: Optional[bytes] = None):
         t0 = time.perf_counter()
         if isinstance(gb_send, QuantBlock):
             # int8 wire: ship values + compact scale table, dequantise fused
@@ -569,11 +625,34 @@ class _Stage2Engine:
             scales = _put(gb_send.scales, self.device)
             self.stats.put_seconds += time.perf_counter() - t0
             self.stats.bytes_put += gb_send.nbytes
+            if cache_key is not None:
+                # Pin the WIRE arrays (int8 codes + scale table, a quarter
+                # of the f32 residency); dequant stays fused per use.
+                self._cache_store(cache_key, (vals, scales, gb_send.group),
+                                  gb_send.nbytes)
             return dequant_rows(vals, scales, gb_send.group)
         gb = _put(gb_send, self.device)
         self.stats.put_seconds += time.perf_counter() - t0
         self.stats.bytes_put += gb_send.nbytes
+        if cache_key is not None:
+            # Pin the device array exactly as put (bf16 stays bf16 — the
+            # upcast is re-run per use, same as the streamed path), so a
+            # cached block decodes bit-identically to a shipped one.
+            self._cache_store(cache_key, gb, gb_send.nbytes)
         return _upcast32(gb) if self._bf16 else gb
+
+    def _cache_store(self, key: bytes, payload, nbytes: int) -> None:
+        if self.cache is not None and self.cache.put(key, payload, nbytes):
+            self.stats.cache_resident_bytes = self.cache.peak_resident_bytes
+
+    def _decode_cached(self, payload):
+        """Re-run the per-use decode step on a pinned payload — the SAME ops
+        the miss path applies after its H2D put, so hit and miss blocks are
+        bit-identical inputs to the epoch kernel."""
+        if isinstance(payload, tuple):
+            vals, scales, group = payload
+            return dequant_rows(vals, scales, group)
+        return _upcast32(payload) if self._bf16 else payload
 
     def _put_vec(self, vec, fill, dtype):
         t0 = time.perf_counter()
@@ -633,6 +712,7 @@ class _Stage2Engine:
         # unconverged task — shrinking cuts H2D bytes, not just FLOPs.
         self.act, self.act_G, self.act_q = None, None, None
         self.blk_active = None
+        self._act_keys = self._act_sizes = None
         live2 = [t for t in range(self.T) if not self.done[t]]
         if self.config.shrink and live2:
             masks = (self.c_g[live2] > 0.0) & (self.u_g[live2] < self.shrink_k)
@@ -663,6 +743,34 @@ class _Stage2Engine:
                                  for b in range(n_blocks)])
                     for t, m in zip(live2, masks)
                 }
+                if self.cache is not None:
+                    # Re-plan the HBM pin set for the new union: keys are
+                    # content-addressed by global row ids, so blocks whose
+                    # row set survived the re-compaction keep their pinned
+                    # device arrays (immediate hits); the rest are evicted
+                    # here and re-pinned lazily by the first cheap epoch's
+                    # misses.  Ranking is violation recency — hottest
+                    # (most recently violating) blocks pin first when the
+                    # union exceeds the cache budget.
+                    self._act_keys = [
+                        block_key(union[b * tile:(b + 1) * tile], self._wire)
+                        for b in range(n_blocks)]
+                    if self.act_q is not None:
+                        self._act_sizes = [q.nbytes for q in self.act_q]
+                    else:
+                        blk_nb = (tile * self.rank
+                                  * self._stage.buf.dtype.itemsize)
+                        self._act_sizes = [blk_nb] * n_blocks
+                    self.cache.plan(
+                        self._act_keys, self._act_sizes,
+                        violation_recency_scores(union, tile,
+                                                 self.u_g[live2], masks))
+                    self.stats.cache_evictions = self.cache.evictions
+        if self.cache is not None and self._act_keys is None:
+            # No compaction to serve (union == n, all tasks converged, or
+            # shrinking off): nothing the cache could hit — drop the pins.
+            self.cache.invalidate()
+            self.stats.cache_evictions = self.cache.evictions
 
     # ----------------------------------------------------- compacted epochs
     def _encode_compacted(self, union: np.ndarray,
@@ -705,16 +813,30 @@ class _Stage2Engine:
         tile = self.tile
         for b in range(math.ceil(len(rows) / tile)):
             s, e = b * tile, min((b + 1) * tile, len(rows))
-            gb_send = (self.act_q[b] if self.act_q is not None
-                       else prep_block(self.act_G[s:e], tile,
-                                       self.cfg.block_dtype, self._group,
-                                       self._stage))
-            self.stats.bytes_h2d += gb_send.nbytes
-            if isinstance(gb_send, QuantBlock):
-                self.stats.bytes_scales += gb_send.scale_bytes
-            self.stats.blocks_streamed += 1
-            self.stats.rows_streamed += e - s
-            gb = self._put_block(gb_send)
+            key = self._act_keys[b] if self._act_keys is not None else None
+            ent = self.cache.lookup(key) if key is not None else None
+            if ent is not None:
+                # Cache hit: the block's wire arrays are already pinned in
+                # HBM — decode per use, ZERO G bytes cross the bus (the
+                # transfer-guard test in tests/test_block_cache.py pins
+                # this down).
+                self.stats.bytes_hit += ent.nbytes
+                self.stats.cache_hits += 1
+                gb = self._decode_cached(ent.payload)
+            else:
+                gb_send = (self.act_q[b] if self.act_q is not None
+                           else prep_block(self.act_G[s:e], tile,
+                                           self.cfg.block_dtype, self._group,
+                                           self._stage))
+                self.stats.bytes_h2d += gb_send.nbytes
+                self.stats.bytes_miss += gb_send.nbytes
+                if isinstance(gb_send, QuantBlock):
+                    self.stats.bytes_scales += gb_send.scale_bytes
+                self.stats.blocks_streamed += 1
+                self.stats.rows_streamed += e - s
+                if self.cache is not None:
+                    self.stats.cache_misses += 1
+                gb = self._put_block(gb_send, cache_key=key)
             self._run_block(gb, rows[s:e], e - s, full=False, blk=b)
         self.pipe.flush()
 
@@ -868,11 +990,23 @@ def merge_stream_stats(reader: Stage2StreamStats,
         out.kernel_calls += s.kernel_calls
         out.put_seconds += s.put_seconds
         out.drain_seconds += s.drain_seconds
+        # Cache traffic is engine-local (compacted unions are partitioned
+        # per shard), so it sums like the other partitioned traffic.
+        out.bytes_hit += s.bytes_hit
+        out.bytes_miss += s.bytes_miss
+        out.cache_hits += s.cache_hits
+        out.cache_misses += s.cache_misses
+        out.cache_evictions += s.cache_evictions
+        out.cache_resident_bytes += s.cache_resident_bytes
     out.epochs = max((s.epochs for s in per_dev), default=0)
     out.full_passes = max((s.full_passes for s in per_dev),
                           default=reader.full_passes)
     out.epoch_bytes = _elementwise_sum([reader.epoch_bytes]
                                        + [s.epoch_bytes for s in per_dev])
+    out.epoch_hit_bytes = _elementwise_sum([s.epoch_hit_bytes
+                                            for s in per_dev])
+    out.epoch_miss_bytes = _elementwise_sum([s.epoch_miss_bytes
+                                             for s in per_dev])
     # Shard unions can OVERLAP in rows (one class's rows are active in every
     # pair that references it, across shards), so this sum is the total rows
     # each cheap epoch streams farm-wide — an upper bound on the true union

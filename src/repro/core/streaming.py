@@ -73,6 +73,14 @@ class StreamConfig:
     autotune_prefetch: bool = True       # deepen the in-flight queue when the
                                          # first full pass is transfer-bound
     prefetch_cap: int = 8                # autotune ceiling on queue depth
+    cache_blocks: bool = True            # pin the shrinking-compacted active
+                                         # row union device-side (HBM block
+                                         # cache); safe default — cached
+                                         # blocks decode bit-identically to
+                                         # streamed ones
+    cache_budget_bytes: Optional[int] = None  # HBM cache allowance per
+                                         # engine; None -> the unused
+                                         # remainder of device_budget_bytes
 
     def __post_init__(self):
         if self.prefetch < 1:
@@ -91,6 +99,8 @@ class StreamConfig:
             raise ValueError("quant_group_rows must be >= 1")
         if self.prefetch_cap < 1:
             raise ValueError("prefetch_cap must be >= 1")
+        if self.cache_budget_bytes is not None and self.cache_budget_bytes < 0:
+            raise ValueError("cache_budget_bytes must be >= 0")
 
 
 def tune_prefetch(h2d_seconds: float, compute_seconds: float, prefetch: int,

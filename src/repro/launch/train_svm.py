@@ -132,6 +132,16 @@ def _report(svm):
                  if s2.bytes_scales else "")
               + f" / {s2.bytes_d2h / 2**20:.1f} MiB D2H, "
               f"active {s2.active_history}")
+        # bytes_miss accrues even with the cache off (the cross-run
+        # identity needs it); only report when the cache actually ran
+        if s2.bytes_hit or s2.cache_resident_bytes:
+            total = s2.bytes_hit + s2.bytes_miss
+            print(f"stage2 cache: {s2.bytes_hit / 2**20:.1f} MiB hit / "
+                  f"{s2.bytes_miss / 2**20:.1f} MiB miss "
+                  f"({100 * s2.bytes_hit / total:.0f}% of compacted G bytes "
+                  f"served from HBM), peak resident "
+                  f"{s2.cache_resident_bytes / 2**20:.1f} MiB, "
+                  f"{s2.cache_evictions} evictions")
     tr = svm.stats.polish_trace
     if tr is not None:
         for lv in tr.levels:
@@ -187,6 +197,14 @@ def main():
                     help="disable the overlapped multi-device stage-2 task "
                          "farm (serial per-device streams; single-device "
                          "hosts are unaffected)")
+    ap.add_argument("--cache-budget-mb", type=float, default=-1.0,
+                    help="HBM allowance for the stage-2 hot-row block cache "
+                         "per device (<0 = the unused remainder of the "
+                         "device budget, the default; 0 disables caching)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the stage-2 HBM block cache (every "
+                         "compacted cheap epoch re-ships the active-row "
+                         "union over H2D)")
     ap.add_argument("--polish", action="store_true",
                     help="coarse-to-fine warm-started stage 2: solve a "
                          "nested subsample ladder (n/16 -> n/4 -> n by "
@@ -216,8 +234,10 @@ def main():
     quant = args.block_dtype != "f32" or args.stage1_dtype != "f32"
     force = args.stream or ((args.chunk_rows > 0 or args.tile_rows > 0
                              or quant) and args.device_budget_mb <= 0)
+    cache_off = args.no_cache or args.cache_budget_mb == 0
     if (args.device_budget_mb > 0 or args.chunk_rows > 0
-            or args.tile_rows > 0 or args.stream or quant or args.no_overlap):
+            or args.tile_rows > 0 or args.stream or quant or args.no_overlap
+            or cache_off or args.cache_budget_mb > 0):
         from repro.core import StreamConfig
         stream_config = StreamConfig(
             device_budget_bytes=int(args.device_budget_mb * 2**20) or 2 << 30,
@@ -226,7 +246,10 @@ def main():
             block_dtype=args.block_dtype,
             stage1_dtype=args.stage1_dtype,
             quant_group_rows=args.quant_group_rows or GROUP_ROWS,
-            overlap_devices=not args.no_overlap)
+            overlap_devices=not args.no_overlap,
+            cache_blocks=not cache_off,
+            cache_budget_bytes=(int(args.cache_budget_mb * 2**20)
+                                if args.cache_budget_mb > 0 else None))
 
     if args.libsvm:
         return train_from_libsvm(args, stream_config)

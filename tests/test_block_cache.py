@@ -1,0 +1,372 @@
+"""Device-resident hot-row block cache (core/block_cache.py).
+
+Pins down the cache's two contracts byte-exactly:
+
+(a) **Trajectory exactness** — caching is invisible to the optimiser:
+    cached == uncached (bit-exact: the cached device arrays ARE the arrays
+    the miss path would have put) == monolithic (existing float tolerances),
+    including shrinking, warm starts, every wire dtype, and ragged tiles.
+(b) **Byte accounting** — every compacted cheap-epoch G block lands in
+    exactly one of hit/miss, so
+        cached.bytes_hit + cached.bytes_miss == uncached.bytes_miss
+        cached.bytes_h2d == uncached.bytes_h2d - cached.bytes_hit
+    hold EXACTLY, warm cache-hit cheap epochs do ZERO G H2D (put-spy: only
+    1-D task vectors cross the bus, under the transfer guard), eviction
+    under a deliberately tiny budget never exceeds it, and the farm's
+    device-count-independent shared-reader invariant survives caching.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core.solver_stream as ss
+from repro.core import (HotRowBlockCache, KernelParams, SolverConfig,
+                        StreamConfig, compute_factor, solve_batch,
+                        solve_batch_streamed, stage2_cache_budget)
+from repro.core.block_cache import block_key, violation_recency_scores
+from repro.core.ovo import build_ovo_tasks
+from repro.data import make_multiclass
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+KP = KernelParams("rbf", gamma=0.25)
+
+WIRES = ("f32", "bf16", "int8")
+
+
+def _problem(n=360, classes=3, budget=64, C=4.0, seed=9):
+    x, y = make_multiclass(n, p=6, n_classes=classes, seed=seed)
+    _, labels = np.unique(y, return_inverse=True)
+    fac = compute_factor(jnp.asarray(x, jnp.float32), KP, budget)
+    tasks, _ = build_ovo_tasks(labels, classes, C)
+    return np.asarray(fac.G), tasks, labels
+
+
+def _pair(G, tasks, cfg, scfg_kw):
+    """One solve with the cache on and one with it off, plus stats."""
+    r_on, s_on = solve_batch_streamed(
+        G, tasks, cfg, return_stats=True,
+        stream_config=StreamConfig(**scfg_kw))
+    r_off, s_off = solve_batch_streamed(
+        G, tasks, cfg, return_stats=True,
+        stream_config=StreamConfig(cache_blocks=False, **scfg_kw))
+    return r_on, s_on, r_off, s_off
+
+
+def _assert_identical(a, b):
+    """Cached vs uncached is BIT-exact, not merely close: the hit path
+    decodes the same device arrays the miss path would have shipped."""
+    np.testing.assert_array_equal(a.alpha, b.alpha)
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+    np.testing.assert_array_equal(a.epochs, b.epochs)
+    np.testing.assert_array_equal(a.violation, b.violation)
+
+
+# ------------------------------------------------- trajectory exactness
+
+@pytest.mark.parametrize("wire", WIRES)
+@pytest.mark.parametrize("tile", [64, 56])       # divisible and ragged
+def test_cached_equals_uncached_equals_monolithic(wire, tile):
+    G, tasks, _ = _problem()
+    cfg = SolverConfig(tol=1e-3, max_epochs=300)
+    r_on, s_on, r_off, s_off = _pair(G, tasks, cfg,
+                                     dict(tile_rows=tile, block_dtype=wire))
+    _assert_identical(r_on, r_off)
+    assert s_on.bytes_hit > 0 and s_on.cache_hits > 0
+    assert s_off.bytes_hit == 0 and s_off.cache_hits == 0
+    if wire == "f32":
+        mono = solve_batch(jnp.asarray(G), tasks, cfg)
+        np.testing.assert_allclose(r_on.alpha, np.asarray(mono.alpha),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(r_on.w, np.asarray(mono.w),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_array_equal(r_on.epochs, np.asarray(mono.epochs))
+
+
+def test_cached_warm_start_exactness():
+    """The C-grid warm-start pattern hits the cache too: the init pass and
+    full passes are shared (uncached) but the compacted cheap epochs of the
+    warm solve still serve from HBM, with the trajectory unchanged."""
+    G, tasks, labels = _problem(C=1.0)
+    cfg = SolverConfig(tol=1e-3, max_epochs=300)
+    first = solve_batch_streamed(G, tasks, cfg,
+                                 stream_config=StreamConfig(tile_rows=64))
+    warm = [np.asarray(a) for a in np.asarray(first.alpha)]
+    tasks4, _ = build_ovo_tasks(labels, 3, 4.0, alpha0=warm)
+    r_on, s_on, r_off, _ = _pair(G, tasks4, cfg, dict(tile_rows=64))
+    _assert_identical(r_on, r_off)
+    assert s_on.bytes_hit > 0
+
+
+# --------------------------------------------------- accounting identities
+
+@pytest.mark.parametrize("wire", WIRES)
+def test_hit_miss_accounting_identities(wire):
+    """Exact complementarity: the cache only redirects compacted cheap-epoch
+    G bytes, so hit + miss with caching equals the miss (= all-compacted-G)
+    bytes without, and the H2D saving is exactly `bytes_hit`.  Per-epoch
+    breakouts sum back to the totals and align with `epoch_bytes`."""
+    G, tasks, _ = _problem(n=420)
+    cfg = SolverConfig(tol=1e-3, max_epochs=300)
+    _, s_on, _, s_off = _pair(G, tasks, cfg,
+                              dict(tile_rows=64, block_dtype=wire))
+    assert s_on.bytes_hit + s_on.bytes_miss == s_off.bytes_miss
+    assert s_on.bytes_h2d == s_off.bytes_h2d - s_on.bytes_hit
+    assert sum(s_on.epoch_hit_bytes) == s_on.bytes_hit
+    assert sum(s_on.epoch_miss_bytes) == s_on.bytes_miss
+    assert len(s_on.epoch_hit_bytes) == len(s_on.epoch_miss_bytes)
+    # warm compacted epochs are >= 90% cache-hit by bytes (the acceptance
+    # bar): after the first post-compaction (miss) epoch, everything hits
+    rates = s_on.epoch_hit_rate
+    warm = [r for r, h, m in zip(rates, s_on.epoch_hit_bytes,
+                                 s_on.epoch_miss_bytes) if h + m > 0 and h > 0]
+    assert warm and max(warm) == 1.0
+    assert s_on.bytes_hit >= 9 * s_on.bytes_miss // 2  # hits dominate overall
+    # block counters tell the same story as the byte counters
+    assert s_on.cache_hits > 0 and s_on.cache_misses > 0
+    assert s_off.cache_misses == 0   # caching off: counter never engages
+    # the pinned residency is bounded by the wire size of one union
+    assert 0 < s_on.cache_resident_bytes <= s_on.tile_rows * G.shape[1] * 4 \
+        * (len(s_on.epoch_bytes) + G.shape[0] // s_on.tile_rows + 1)
+
+
+def test_warm_cheap_epoch_zero_g_h2d(monkeypatch):
+    """THE tentpole assertion: once the cache is warm, a compacted cheap
+    epoch moves ZERO G bytes host-to-device — every `_put` during the epoch
+    is a 1-D task vector, asserted under the H2D transfer guard (so an
+    implicit fallback transfer would raise, not slip through)."""
+    G, tasks, _ = _problem()
+    cfg = SolverConfig(tol=1e-8, max_epochs=40)   # never converges: engine
+    scfg = StreamConfig(tile_rows=64)             # state survives the drive
+    eng = ss._Stage2Engine(G, tasks, cfg, scfg,
+                           epoch_fn=ss.smo_epoch_oracle, device=None,
+                           tile=64)
+    ss.drive_streamed_engines([eng], G, cfg, scfg, tile=64)
+    assert eng.act is not None, "no compaction happened — grow max_epochs"
+    assert eng.cache is not None and eng.cache.n_entries > 0
+    hit0, miss0 = eng.stats.bytes_hit, eng.stats.bytes_miss
+
+    puts = []
+    orig = ss._put
+
+    def spy(a, device=None):
+        puts.append(np.shape(a))
+        return orig(a, device)
+
+    monkeypatch.setattr(ss, "_put", spy)
+    guard = getattr(jax, "transfer_guard_host_to_device", None)
+    if guard is None:
+        pytest.skip("no transfer guard in this jax")
+    with guard("disallow"):
+        eng.run_cheap_epoch()
+    assert all(len(s) == 1 for s in puts), \
+        f"G block crossed the bus during a warm cheap epoch: {puts}"
+    assert eng.stats.bytes_miss == miss0          # zero G H2D...
+    assert eng.stats.bytes_hit == hit0 + sum(eng._act_sizes)  # ...all hits
+
+
+# ---------------------------------------------------------------- eviction
+
+@pytest.mark.parametrize("wire", ["f32", "int8"])
+def test_tiny_budget_evicts_and_stays_exact(wire):
+    """A budget worth ~2 blocks forces partial pinning: the residency never
+    exceeds the budget, the cold tail keeps streaming (misses persist), and
+    the trajectory is still bit-identical to the uncached solve."""
+    G, tasks, _ = _problem(n=420)
+    rank = G.shape[1]
+    tile = 64
+    blk = (tile * rank + tile * 8) if wire == "int8" else tile * rank * 4
+    budget = 2 * blk
+    cfg = SolverConfig(tol=1e-3, max_epochs=300)
+    r_on, s_on, r_off, s_off = _pair(
+        G, tasks, cfg, dict(tile_rows=tile, block_dtype=wire,
+                            cache_budget_bytes=budget))
+    _assert_identical(r_on, r_off)
+    assert 0 < s_on.cache_resident_bytes <= budget
+    assert s_on.bytes_hit + s_on.bytes_miss == s_off.bytes_miss
+    assert s_on.bytes_hit > 0
+    # partial pinning: unlike the unbounded cache, misses keep flowing after
+    # the warm-up epoch whenever the union needs more than 2 blocks
+    assert s_on.bytes_miss > s_off.bytes_miss // len(s_off.epoch_bytes)
+
+
+def test_zero_budget_is_cache_off():
+    """`cache_budget_bytes=0` pins nothing — byte-for-byte the uncached
+    stream, with the cache counters flat."""
+    G, tasks, _ = _problem()
+    cfg = SolverConfig(tol=1e-3, max_epochs=200)
+    r_on, s_on, r_off, s_off = _pair(G, tasks, cfg,
+                                     dict(tile_rows=64,
+                                          cache_budget_bytes=0))
+    _assert_identical(r_on, r_off)
+    assert s_on.bytes_hit == 0 and s_on.cache_resident_bytes == 0
+    assert s_on.bytes_h2d == s_off.bytes_h2d
+
+
+# ------------------------------------------------------- planning helpers
+
+def test_stage2_cache_budget_model():
+    cfg = StreamConfig(device_budget_bytes=1 << 22)
+    b = stage2_cache_budget(64, 3, 256, cfg.prefetch, cfg)
+    assert b == (cfg.device_budget_bytes
+                 - ss.stage2_resident_bytes(64, 3)
+                 - cfg.prefetch * ss.stage2_block_bytes(256, 64, 3))
+    # explicit budget wins; disabled or over-committed models floor at 0
+    cfg_x = StreamConfig(cache_budget_bytes=12345)
+    assert stage2_cache_budget(64, 3, 256, 2, cfg_x) == 12345
+    assert stage2_cache_budget(64, 3, 256, 2,
+                               StreamConfig(cache_blocks=False)) == 0
+    assert stage2_cache_budget(512, 100, 4096, 8,
+                               StreamConfig(device_budget_bytes=1 << 10)) == 0
+    # an explicit carve-out shrinks the auto tile (cache residency is real)
+    roomy = StreamConfig(device_budget_bytes=1 << 22)
+    carved = StreamConfig(device_budget_bytes=1 << 22,
+                          cache_budget_bytes=3 << 20)
+    assert ss.auto_tile_rows(10_000, 128, 3, carved) \
+        < ss.auto_tile_rows(10_000, 128, 3, roomy)
+    # ...but only while caching is on
+    carved_off = StreamConfig(device_budget_bytes=1 << 22,
+                              cache_budget_bytes=3 << 20, cache_blocks=False)
+    assert ss.auto_tile_rows(10_000, 128, 3, carved_off) \
+        == ss.auto_tile_rows(10_000, 128, 3, roomy)
+
+
+def test_violation_recency_ranks_hot_blocks_first():
+    """The eviction policy: under pressure the plan keeps the blocks whose
+    rows violated most recently (smallest unchanged counters)."""
+    union = np.arange(8)
+    u = np.array([[9, 9, 0, 1, 9, 9, 5, 5]])      # rows 2,3 hottest
+    masks = np.ones((1, 8), bool)
+    scores = violation_recency_scores(union, 2, u, masks)
+    assert scores == [9.0, 0.0, 9.0, 5.0]         # per 2-row block
+    cache = HotRowBlockCache(budget_bytes=200)
+    keys = [block_key(union[s:s + 2], "f32") for s in range(0, 8, 2)]
+    planned = cache.plan(keys, [100] * 4, scores)
+    assert planned == {keys[1], keys[3]}          # hottest two fit
+    # masked-out rows don't vote: a block whose hot rows all went inactive
+    # scores colder than every block with a live row
+    masks2 = masks.copy()
+    masks2[0, 2:4] = False
+    s2 = violation_recency_scores(union, 2, u, masks2)
+    assert s2[1] > max(s2[0], s2[2], s2[3])
+
+
+def test_cache_keys_survive_stable_recompaction():
+    """Content-addressed keys: re-planning the SAME block list keeps the
+    pinned entries (no eviction, immediate hits); a changed union drops
+    exactly the stale ones."""
+    cache = HotRowBlockCache(budget_bytes=1000)
+    rows_a, rows_b = np.arange(0, 4), np.arange(4, 8)
+    ka, kb = block_key(rows_a, "f32"), block_key(rows_b, "f32")
+    cache.plan([ka, kb], [400, 400], [0.0, 1.0])
+    assert cache.put(ka, "payload-a", 400)
+    assert cache.put(kb, "payload-b", 400)
+    cache.plan([ka, kb], [400, 400], [1.0, 0.0])   # same keys, new scores
+    assert cache.evictions == 0 and cache.n_entries == 2
+    assert cache.lookup(ka).payload == "payload-a"
+    kc = block_key(np.arange(4, 9), "f32")
+    cache.plan([ka, kc], [400, 400], [0.0, 0.0])   # b fell out of the union
+    assert cache.evictions == 1 and cache.lookup(kb) is None
+    assert cache.lookup(ka) is not None
+    # same rows on a different wire are a different device payload
+    assert block_key(rows_a, "int8") != ka
+
+
+# ------------------------------------------------------ multi-device farm
+
+def test_farm_shared_bytes_device_invariant_with_cache():
+    """2-device subprocess: with caching ON (the default), per-pass shared
+    `bytes_h2d` stays independent of device count — full passes never touch
+    the per-device caches — while BOTH devices' caches serve their shard's
+    compacted epochs, and the farm trajectory still matches monolithic."""
+    code = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import (KernelParams, SolverConfig, StreamConfig,
+                        compute_factor, solve_batch, solve_batch_streamed,
+                        solve_tasks_streamed)
+from repro.core.ovo import build_ovo_tasks
+from repro.data import make_multiclass
+
+x, y = make_multiclass(360, p=6, n_classes=4, seed=9)
+_, labels = np.unique(y, return_inverse=True)
+fac = compute_factor(jnp.asarray(x, jnp.float32),
+                     KernelParams("rbf", gamma=0.25), 64)
+G = np.asarray(fac.G)
+tasks, _ = build_ovo_tasks(labels, 4, 4.0)
+cfg = SolverConfig(tol=1e-4, max_epochs=300)
+scfg = StreamConfig(tile_rows=96)
+devs = jax.local_devices()
+assert len(devs) == 2 and scfg.cache_blocks
+
+mono = solve_batch(jnp.asarray(G), tasks, cfg)
+one, st1 = solve_batch_streamed(G, tasks, cfg, stream_config=scfg,
+                                return_stats=True)
+two, st2 = solve_tasks_streamed(G, tasks, cfg, devices=devs,
+                                stream_config=scfg, return_stats=True)
+np.testing.assert_allclose(two.alpha, np.asarray(mono.alpha),
+                           rtol=1e-4, atol=1e-5)
+np.testing.assert_allclose(two.w, np.asarray(mono.w), rtol=1e-4, atol=1e-5)
+np.testing.assert_array_equal(two.epochs, np.asarray(mono.epochs))
+# shared reader invariant survives caching: identical first-full-pass bytes
+assert st2.epoch_bytes[0] == st1.epoch_bytes[0], \
+    (st2.epoch_bytes[0], st1.epoch_bytes[0])
+# every device's cache engaged on its own shard
+assert len(st2.per_device) == 2
+assert all(s.bytes_hit > 0 for s in st2.per_device), \
+    [(s.bytes_hit, s.bytes_miss) for s in st2.per_device]
+assert st2.bytes_hit == sum(s.bytes_hit for s in st2.per_device)
+assert st2.cache_resident_bytes == sum(s.cache_resident_bytes
+                                       for s in st2.per_device)
+print("CACHE-MESH-OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "CACHE-MESH-OK" in out.stdout
+
+
+# --------------------------------------------------------- prefetch clamp
+
+def test_prefetch_clamped_when_majority_cache_hit(monkeypatch):
+    """Satellite fix: a first full pass that already compacted a
+    majority-pinned union clamps the autotune cap to the current depth — a
+    deeper H2D queue buys nothing when the coming epochs mostly hit HBM.
+    Tasks covering only half the rows compact at epoch 0, so the clamp is
+    observable through the tune_prefetch call."""
+    from repro.core.dual_solver import TaskBatch
+    rng = np.random.default_rng(11)
+    n, rank = 320, 48
+    G = rng.normal(size=(n, rank)).astype(np.float32) / np.sqrt(rank)
+    n_pad = 160
+    idx = np.zeros((1, n_pad), np.int32)
+    idx[0] = np.arange(160)                        # half the rows: union < n
+    y = np.ones((1, n_pad), np.float32)
+    y[:, 80:] = -1.0
+    c = np.full((1, n_pad), 4.0, np.float32)
+    tasks = TaskBatch(idx=jnp.asarray(idx), y=jnp.asarray(y),
+                      c=jnp.asarray(c), alpha0=jnp.zeros((1, n_pad)))
+    calls = []
+
+    def fake_tune(put, drain, prefetch, cap):
+        calls.append((prefetch, cap))
+        return prefetch
+
+    monkeypatch.setattr(ss, "tune_prefetch", fake_tune)
+    cfg = SolverConfig(tol=1e-3, max_epochs=60)
+    solve_batch_streamed(G, tasks, cfg,
+                         stream_config=StreamConfig(tile_rows=64,
+                                                    prefetch_cap=9))
+    assert calls == [(2, 2)], calls      # cap clamped to the current depth
+    calls.clear()
+    solve_batch_streamed(G, tasks, cfg,
+                         stream_config=StreamConfig(tile_rows=64,
+                                                    prefetch_cap=9,
+                                                    cache_blocks=False))
+    assert calls == [(2, 9)], calls      # cache off: the old cap survives

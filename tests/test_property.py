@@ -1,16 +1,25 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+hypothesis is a DEV dependency (requirements-dev.txt, installed in CI) and
+deliberately not a runtime one — the importorskip keeps the tier-1 suite
+green on bare containers while CI runs the full property sweep.
+"""
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")  # not baked into the container
+hypothesis = pytest.importorskip("hypothesis")  # dev dep; see requirements-dev.txt
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 
+from repro.core.block_cache import HotRowBlockCache, block_key
 from repro.core.dual_solver import SolverConfig, solve_one
 from repro.core.kernel_fn import KernelParams, gram
 from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
+from repro.core.quant import (GROUP_ROWS, dequantize_rows, encode_rows,
+                              expand_scales, group_scales, max_quant_error,
+                              quantize_rows)
 from repro.data import write_libsvm, read_libsvm
 
 hypothesis.settings.register_profile(
@@ -83,6 +92,116 @@ def test_ovo_vote_in_range(n_classes, m, pyrng):
     pred = ovo_vote(d, pairs, n_classes)
     assert pred.shape == (m,)
     assert pred.min() >= 0 and pred.max() < n_classes
+
+
+# ------------------------------------------------- int8 wire codec (quant)
+
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=1, max_side=64),
+                  elements=st.floats(-50, 50, allow_nan=False, width=32)),
+       st.sampled_from([1, 2, 8, GROUP_ROWS]),
+       st.booleans())
+def test_quant_roundtrip_error_bound(x, group, symmetric):
+    """For ANY block: the decode error never exceeds the bound the scale
+    table promises (half a quantisation step per group), and constant groups
+    round-trip exactly."""
+    vals, scales = quantize_rows(x, group, symmetric=symmetric)
+    out = dequantize_rows(vals, scales, group)
+    err = np.abs(out - x)
+    bound = max_quant_error(scales)
+    if symmetric:
+        # symmetric mode spans absmax over 127 steps: one step of slack
+        bound = 2 * bound
+    assert err.max() <= bound + 1e-6 * max(1.0, np.abs(x).max())
+    const = np.full((group, x.shape[1]), np.float32(x[0, 0]))
+    v2, s2 = quantize_rows(const, group, symmetric=symmetric)
+    if symmetric:
+        np.testing.assert_allclose(dequantize_rows(v2, s2, group), const,
+                                   atol=2 * max_quant_error(s2) + 1e-6)
+    else:
+        np.testing.assert_array_equal(dequantize_rows(v2, s2, group), const)
+
+
+@given(st.integers(2, 40), st.integers(1, 16),
+       st.sampled_from([1, 2, 4, 8]),
+       st.randoms(use_true_random=False))
+def test_quant_global_scale_gather_invariance(n, p, group, pyrng):
+    """THE invariant the cached int8 tier rests on: encoding an ARBITRARY
+    row gather under each row's GLOBAL group scale decodes bit-identically
+    to the rows' in-place encoding — so a compacted (or cached) block and a
+    shared-pass block carry the same decoded values for the same rows."""
+    rng = np.random.default_rng(pyrng.randint(0, 2**31))
+    G = rng.normal(size=(n, p)).astype(np.float32)
+    gscales = group_scales(G, group)
+    vals_full = encode_rows(G, expand_scales(gscales, group, n))
+    full_dec = dequantize_rows(vals_full, gscales, group)
+    rows = rng.choice(n, size=rng.integers(1, n + 1), replace=False)
+    srow = gscales[rows // group]                   # per-row global entries
+    vals_gather = encode_rows(G[rows], srow)
+    gather_dec = vals_gather.astype(np.float32) * srow[:, 0:1] + srow[:, 1:2]
+    np.testing.assert_array_equal(vals_gather, vals_full[rows])
+    np.testing.assert_array_equal(gather_dec, full_dec[rows])
+
+
+# -------------------------------------------- hot-row block cache planning
+
+_plan_strategy = st.lists(
+    st.tuples(st.integers(0, 1 << 16),      # block nbytes
+              st.floats(0, 1e6, allow_nan=False)),   # violation recency
+    min_size=0, max_size=32)
+
+
+@given(_plan_strategy, st.integers(0, 1 << 18),
+       st.randoms(use_true_random=False))
+def test_cache_never_exceeds_budget_and_hits_subset_of_plan(blocks, budget,
+                                                            pyrng):
+    """For ANY block list / budget / lookup order: resident bytes never
+    exceed the budget, stored entries are always a subset of the planned pin
+    set, and re-planning evicts exactly the fallen-out keys."""
+    rng = np.random.default_rng(pyrng.randint(0, 2**31))
+    cache = HotRowBlockCache(budget)
+    keys = [block_key(np.asarray([i]), "f32") for i in range(len(blocks))]
+    sizes = [b[0] for b in blocks]
+    scores = [b[1] for b in blocks]
+    planned = cache.plan(keys, sizes, scores)
+    assert sum(nb for k, nb in zip(keys, sizes) if k in planned) <= budget
+    for i in rng.permutation(len(blocks)):
+        cache.put(keys[i], f"payload-{i}", sizes[i])
+        assert cache.resident_bytes <= budget
+    hit = {k for k in keys if cache.lookup(k) is not None}
+    assert hit <= planned                       # hit set subset of pin set
+    assert cache.resident_bytes <= cache.peak_resident_bytes <= budget
+    # a planned block is never rejected for space: the plan pre-reserved it
+    assert hit == planned
+    # re-plan with half the blocks: survivors keep entries, the rest evict
+    half = len(blocks) // 2
+    planned2 = cache.plan(keys[:half], sizes[:half], scores[:half])
+    for k in keys:
+        if cache.lookup(k) is not None:
+            assert k in planned2
+    assert cache.resident_bytes <= budget
+    frac = cache.planned_fraction(keys[:half], sizes[:half])
+    assert 0.0 <= frac <= 1.0
+
+
+@given(st.lists(st.integers(1, 100), min_size=1, max_size=16),
+       st.randoms(use_true_random=False))
+def test_cache_plan_prefers_hotter_blocks(sizes, pyrng):
+    """With a budget that cannot hold everything, every pinned block is at
+    least as hot (lower score) as every unpinned one of equal size-or-
+    smaller feasibility — concretely: the pin set under equal sizes is a
+    prefix of the score order."""
+    rng = np.random.default_rng(pyrng.randint(0, 2**31))
+    nb = len(sizes)
+    size = 10                                    # equal sizes isolate order
+    scores = rng.permutation(nb).astype(float)
+    keys = [block_key(np.asarray([i]), "int8") for i in range(nb)]
+    budget = size * max(1, nb // 2)
+    cache = HotRowBlockCache(budget)
+    planned = cache.plan(keys, [size] * nb, list(scores))
+    k_fit = budget // size
+    want = {keys[i] for i in np.argsort(scores, kind="stable")[:k_fit]}
+    assert planned == want
 
 
 @given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
