@@ -2,9 +2,10 @@
 #
 #   make test        tier-1 suite (the invocation ROADMAP.md pins)
 #   make test-mesh   multi-device suites under 4 forced host devices
-#   make bench       out-of-core + mesh-farm + polish curves ->
+#   make bench       out-of-core + mesh-farm + polish + CV-grid curves ->
 #                    BENCH_streaming.json + BENCH_stage2_stream.json +
-#                    BENCH_stage2_mesh.json + BENCH_polish.json
+#                    BENCH_stage2_mesh.json + BENCH_polish.json +
+#                    BENCH_cv_grid.json
 #   make bench-smoke same suites at smoke sizes (fast CI loop)
 #   make bench-all   every benchmark suite (paper tables + streaming)
 #   make lint        byte-compile + import smoke over all python trees
@@ -27,7 +28,7 @@ test-mesh:
 	$(PY) -m pytest -x -q tests/test_stage2_mesh.py tests/test_block_cache.py
 
 bench:
-	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish
+	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish table3
 
 # smoke-sized records must not clobber the committed BENCH_*.json trajectory
 bench-smoke:
@@ -36,7 +37,8 @@ bench-smoke:
 	BENCH_STAGE2_STREAM_JSON=/tmp/BENCH_stage2_stream.smoke.json \
 	BENCH_STAGE2_MESH_JSON=/tmp/BENCH_stage2_mesh.smoke.json \
 	BENCH_POLISH_JSON=/tmp/BENCH_polish.smoke.json \
-	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish
+	BENCH_CV_GRID_JSON=/tmp/BENCH_cv_grid.smoke.json \
+	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish table3
 
 bench-all:
 	$(PY) -m benchmarks.run

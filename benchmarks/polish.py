@@ -150,12 +150,12 @@ def run() -> None:
             emit(f"polish_stream_n{n}_B{rank}", t_ps * 1e6,
                  f"{tr.total_row_visits} visits "
                  f"{fin.bytes_h2d / 2**20:.1f}MiB h2d "
-                 f"(cold {st.kernel_calls * st.tile_rows} visits "
+                 f"(cold {st.coord_visits} visits "
                  f"{st.bytes_h2d / 2**20:.1f}MiB)")
             records.append({
                 "mode": "streamed_pair", "n": n, "rank": rank,
                 "cold_seconds": t_cs, "polished_seconds": t_ps,
-                "cold_row_visits": st.kernel_calls * st.tile_rows,
+                "cold_row_visits": st.coord_visits,
                 "polished_row_visits": tr.total_row_visits,
                 "cold_bytes_h2d": st.bytes_h2d,
                 "polished_final_bytes_h2d": fin.bytes_h2d})

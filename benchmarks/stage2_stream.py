@@ -94,10 +94,10 @@ def run() -> None:
                     # these sizes
                     t = timeit(streamed, repeats=1)
                     st = holder["st"]
-                    # every kernel call sweeps one (tile,) block for one
-                    # task, so this matches the monolithic epochs.sum() * n
-                    # visit count (modulo tail-block padding)
-                    visits = st.kernel_calls * st.tile_rows
+                    # every kernel call sweeps one task's WINDOW of a
+                    # block, so this matches the monolithic epochs.sum() * n
+                    # visit count without the inert padding
+                    visits = st.coord_visits
                     # effective host->device throughput: physical DMA bytes
                     # over the host time spent inside puts (the quantised
                     # wire's point: same rows, fewer bytes, higher effective

@@ -1,7 +1,8 @@
 """LPD-SVM core: the paper's contribution as a composable JAX module."""
 from repro.core.block_cache import (HotRowBlockCache, block_key,
                                     stage2_cache_budget,
-                                    violation_recency_scores)
+                                    violation_recency_scores,
+                                    violation_recency_scores_tasks)
 from repro.core.kernel_fn import KernelParams, gram, kernel_diag, median_gamma
 from repro.core.nystrom import LowRankFactor, compute_factor, select_landmarks
 from repro.core.dual_solver import (SolverConfig, TaskBatch, SolveResult,
@@ -13,13 +14,15 @@ from repro.core.quant import (GROUP_ROWS, QuantBlock, dequant_rows,
                               dequantize_rows, quant_bytes, quantize_block,
                               quantize_rows)
 from repro.core.solver_stream import (Stage2StreamStats, auto_tile_rows,
-                                      should_stream_stage2,
+                                      block_windows, should_stream_stage2,
                                       solve_batch_streamed,
                                       solve_streamed_auto, tune_prefetch,
                                       wire_group)
 from repro.core.svm import LPDSVM
-from repro.core.cv import grid_search, cross_validate, kfold_masks
-from repro.core.distributed import (balance_task_split, solve_tasks_sharded,
+from repro.core.cv import (build_cv_grid_tasks, grid_search, cross_validate,
+                           kfold_masks)
+from repro.core.distributed import (balance_chain_split, balance_task_split,
+                                    solve_tasks_sharded,
                                     solve_tasks_streamed,
                                     solve_tasks_streamed_mesh,
                                     stream_factor_over_mesh)
@@ -31,7 +34,7 @@ from repro.core.streaming import (Stage1StreamStats, StreamConfig,
 
 __all__ = [
     "HotRowBlockCache", "block_key", "stage2_cache_budget",
-    "violation_recency_scores",
+    "violation_recency_scores", "violation_recency_scores_tasks",
     "KernelParams", "gram", "kernel_diag", "median_gamma",
     "LowRankFactor", "compute_factor", "select_landmarks",
     "SolverConfig", "TaskBatch", "SolveResult", "solve_one", "solve_batch",
@@ -39,11 +42,14 @@ __all__ = [
     "PolishSchedule", "PolishTrace", "make_schedule", "solve_polished",
     "GROUP_ROWS", "QuantBlock", "dequant_rows", "dequantize_rows",
     "quant_bytes", "quantize_block", "quantize_rows",
-    "Stage2StreamStats", "auto_tile_rows", "should_stream_stage2",
+    "Stage2StreamStats", "auto_tile_rows", "block_windows",
+    "should_stream_stage2",
     "solve_batch_streamed", "solve_streamed_auto", "tune_prefetch",
     "wire_group",
-    "LPDSVM", "grid_search", "cross_validate", "kfold_masks",
-    "balance_task_split", "solve_tasks_sharded", "solve_tasks_streamed",
+    "LPDSVM", "build_cv_grid_tasks", "grid_search", "cross_validate",
+    "kfold_masks",
+    "balance_chain_split", "balance_task_split",
+    "solve_tasks_sharded", "solve_tasks_streamed",
     "solve_tasks_streamed_mesh", "stream_factor_over_mesh",
     "Stage1StreamStats", "StreamConfig", "auto_chunk_rows",
     "compute_factor_streamed", "compute_factor_streamed_csr",

@@ -175,6 +175,26 @@ def violation_recency_scores(union: np.ndarray, tile: int,
     return [float(u[s:s + tile].min()) for s in range(0, len(union), tile)]
 
 
+def violation_recency_scores_tasks(union: np.ndarray, tile: int,
+                                   u_windows: Sequence[np.ndarray],
+                                   id_windows: Sequence[np.ndarray],
+                                   ) -> List[float]:
+    """`violation_recency_scores` over task-LOCAL coordinates — the same
+    per-block minimum-recency ranking, computed from each live task's
+    (active-row unchanged counters, active-row global ids) window pairs
+    instead of (T_live, n) matrices, so scoring a grid farm's compaction is
+    O(sum active task sizes) like the rest of the engine."""
+    if len(union) == 0:
+        return []
+    best = np.full(len(union), np.iinfo(np.int64).max, np.int64)
+    for u, ids in zip(u_windows, id_windows):
+        if len(ids):
+            np.minimum.at(best, np.searchsorted(union, ids),
+                          np.asarray(u, np.int64))
+    return [float(best[s:s + tile].min())
+            for s in range(0, len(union), tile)]
+
+
 def stage2_cache_budget(rank: int, n_tasks: int, tile: int,
                         prefetch: int, cfg: StreamConfig) -> int:
     """Cache byte budget for one engine: an explicit

@@ -95,21 +95,87 @@ def build_cv_tasks(
     return tasks, pairs
 
 
-def _cv_error(factor: LowRankFactor, labels: np.ndarray, n_classes: int,
-              W: jnp.ndarray, val_masks: Sequence[np.ndarray]) -> float:
-    """Validation error using precomputed G rows as features (no kernel evals)."""
+def _fold_val_sets(factor: LowRankFactor, labels: np.ndarray,
+                   val_masks: Sequence[np.ndarray]) -> List[tuple]:
+    """Hoisted per-fold validation features: the `np.where(vm)[0]` index and
+    the G validation-row gather are computed ONCE per gamma here instead of
+    once per (gamma, C) cell inside the C loop."""
+    return [(factor.G[np.where(vm)[0]], labels[vm]) for vm in val_masks]
+
+
+def _cv_error_from(val_sets: Sequence[tuple], n_classes: int,
+                   W: jnp.ndarray) -> float:
+    """Validation error of one (gamma, C) cell from pre-gathered fold sets."""
     pairs = class_pairs(n_classes)
     n_pairs = len(pairs)
     wrong = 0
     total = 0
-    for f, vm in enumerate(val_masks):
+    for f, (Gv, yv) in enumerate(val_sets):
         Wf = W[f * n_pairs:(f + 1) * n_pairs]
-        dec = np.asarray(factor.G[np.where(vm)[0]] @ Wf.T)
+        dec = np.asarray(Gv @ Wf.T)
         pred = (ovo_vote(dec, pairs, n_classes) if n_pairs > 1
                 else np.where(dec[:, 0] > 0, 0, 1))
-        wrong += int(np.sum(pred != labels[vm]))
-        total += int(vm.sum())
+        wrong += int(np.sum(pred != yv))
+        total += len(yv)
     return wrong / max(total, 1)
+
+
+def _cv_error(factor: LowRankFactor, labels: np.ndarray, n_classes: int,
+              W: jnp.ndarray, val_masks: Sequence[np.ndarray]) -> float:
+    """Validation error using precomputed G rows as features (no kernel evals)."""
+    return _cv_error_from(_fold_val_sets(factor, labels, val_masks),
+                          n_classes, W)
+
+
+def build_cv_grid_tasks(
+    labels: np.ndarray,
+    n_classes: int,
+    Cs: Sequence[float],
+    val_masks: Sequence[np.ndarray],
+    *,
+    n_pad: Optional[int] = None,
+    warm: Optional[jnp.ndarray] = None,
+    ladder: bool = True,
+) -> Tuple[TaskBatch, list, Optional[np.ndarray]]:
+    """One TaskBatch carrying EVERY (C, fold, pair) cell of a gamma.
+
+    Level-major layout on top of `build_cv_tasks`' fold-major one: cell
+    (ci, f, t) is task  u = ci * folds * n_pairs + f * n_pairs + t,  so
+    slicing ``ci * FP:(ci + 1) * FP`` (FP = folds * n_pairs) recovers one
+    C value's batch in exactly the per-cell layout.
+
+    ``Cs`` must be ascending.  With ``ladder=True`` the returned
+    ``chain_next`` declares each cell the warm-start predecessor of the same
+    (fold, pair) cell at the next C — the paper's C-ladder warm start,
+    executed inside the streamed engine (`solver_stream`) so the whole grid
+    trains in one G stream.  ``warm`` seeds level 0 (cross-gamma warm
+    start), clipped into the first C box by `build_cv_tasks`.
+    """
+    Cs = [float(C) for C in Cs]
+    if sorted(Cs) != Cs:
+        raise ValueError("build_cv_grid_tasks requires ascending Cs")
+    if n_pad is None:
+        counts = np.bincount(labels, minlength=n_classes)
+        top2 = np.sort(counts)[-2:].sum()
+        n_pad = -(-int(top2) // 8) * 8
+    levels, pairs = [], None
+    for ci, C in enumerate(Cs):
+        tb, pairs = build_cv_tasks(labels, n_classes, C, val_masks,
+                                   n_pad=n_pad,
+                                   warm=warm if ci == 0 else None)
+        levels.append(tb)
+    tasks = TaskBatch(
+        idx=jnp.concatenate([b.idx for b in levels]),
+        y=jnp.concatenate([b.y for b in levels]),
+        c=jnp.concatenate([b.c for b in levels]),
+        alpha0=jnp.concatenate([b.alpha0 for b in levels]),
+    )
+    chain = None
+    FP = len(val_masks) * len(pairs)
+    if ladder and len(Cs) > 1:
+        chain = np.full((len(Cs) * FP,), -1, np.int64)
+        chain[:(len(Cs) - 1) * FP] = np.arange((len(Cs) - 1) * FP) + FP
+    return tasks, pairs, chain
 
 
 @dataclasses.dataclass
@@ -122,6 +188,11 @@ class GridResult:
     stage2_seconds: float
     n_binary_solved: int
     per_cell_seconds: np.ndarray  # (n_gamma, n_C)
+    stream_stats: Optional[list] = None
+    # ^ farm path: one Stage2StreamStats per gamma — the whole (C x folds)
+    #   grid of that gamma trained in the one stream it records, so "one
+    #   pass set per grid" is assertable, not just timed
+    bytes_h2d: Optional[np.ndarray] = None   # (n_gamma,) farm H2D bytes
 
 
 def grid_search(
@@ -144,11 +215,21 @@ def grid_search(
     polish: bool = False,
     polish_levels: int = 3,
     polish_schedule: Optional[PolishSchedule] = None,
+    farm: Optional[bool] = None,
 ) -> GridResult:
     """Full grid search with k-fold CV, G reuse per gamma, warm starts over C.
 
     Cs are solved in ascending order so each cell warm-starts from its
     predecessor (alphas clipped into the new box).
+
+    ``farm`` selects the grid TASK FARM: every (C, fold, pair) cell of a
+    gamma rides ONE streamed TaskBatch (`build_cv_grid_tasks`) with the
+    C-ladder warm starts executed inside the engine (`chain_next`), so each
+    streamed G block updates every live grid cell before eviction and the
+    grid costs ~one training pass of H2D instead of |Cs| pass sets.  The
+    default (``None``) routes onto the farm exactly when the cells would
+    stream anyway (`route_stage2`) and no polish ladder is requested;
+    ``True`` forces it, ``False`` pins the per-cell serial loop.
 
     ``warm_start_gamma`` (beyond-paper): also seed the first C of each new
     gamma from the previous gamma's alphas at the same C.  The dual variables
@@ -175,6 +256,8 @@ def grid_search(
     t_stage2 = 0.0
     n_solved = 0
     best = (np.inf, None, None)
+    gamma_stats: List = [None] * len(gammas)
+    gamma_bytes = np.zeros((len(gammas),), np.int64)
 
     warm_first_c = None       # cross-gamma seed (beyond-paper)
     for gi, gamma in enumerate(gammas):
@@ -187,6 +270,46 @@ def grid_search(
         t_stage1 += time.perf_counter() - t0
 
         warm = warm_first_c if warm_start_gamma else None
+        use_farm = False
+        if farm is not False and polish_schedule is None and len(Cs) > 1:
+            gtasks, pairs, chain = build_cv_grid_tasks(
+                labels, n_classes, Cs, val_masks,
+                warm=warm if warm_start else None,
+                ladder=warm_start)
+            use_farm = (farm is True
+                        or route_stage2(factor, gtasks, stream, stream_config,
+                                        solve_fn, solve_batch))
+        if use_farm:
+            # Grid task farm: one streamed solve trains every (C, fold,
+            # pair) cell of this gamma — the C-ladder runs inside the
+            # engine, so the epoch budget covers the whole ladder (the +1
+            # per level pays each seeded cell's w0-accumulation pass).
+            t0 = time.perf_counter()
+            FP = folds * len(pairs)
+            farm_cfg = dataclasses.replace(
+                config, max_epochs=config.max_epochs * len(Cs) + len(Cs))
+            res, sstats = solve_streamed_auto(
+                factor.G, gtasks, farm_cfg, stream_config=stream_config,
+                chain_next=chain, return_stats=True)
+            wait_for_factor(res.w)
+            dt = time.perf_counter() - t0
+            t_stage2 += dt
+            cell_sec[gi, :] = dt / len(Cs)
+            n_solved += gtasks.n_tasks
+            gamma_stats[gi] = sstats
+            gamma_bytes[gi] = sstats.bytes_h2d
+            val_sets = _fold_val_sets(factor, labels, val_masks)
+            W = np.asarray(res.w)
+            for ci, C in enumerate(Cs):
+                err = _cv_error_from(val_sets, n_classes,
+                                     W[ci * FP:(ci + 1) * FP])
+                errors[gi, ci] = err
+                if err < best[0]:
+                    best = (err, float(gamma), C)
+            warm_first_c = np.asarray(res.alpha)[:FP]
+            continue
+
+        val_sets = _fold_val_sets(factor, labels, val_masks)
         for ci, C in enumerate(Cs):
             t0 = time.perf_counter()
             tasks, _ = build_cv_tasks(labels, n_classes, C, val_masks,
@@ -201,15 +324,18 @@ def grid_search(
             warm = res.alpha
             if ci == 0:
                 warm_first_c = res.alpha
-            err = _cv_error(factor, labels, n_classes, res.w, val_masks)
+            err = _cv_error_from(val_sets, n_classes, res.w)
             errors[gi, ci] = err
             if err < best[0]:
                 best = (err, float(gamma), C)
 
+    farmed = any(s is not None for s in gamma_stats)
     return GridResult(
         errors=errors, best_gamma=best[1], best_C=best[2], best_error=best[0],
         stage1_seconds=t_stage1, stage2_seconds=t_stage2,
         n_binary_solved=n_solved, per_cell_seconds=cell_sec,
+        stream_stats=gamma_stats if farmed else None,
+        bytes_h2d=gamma_bytes if farmed else None,
     )
 
 

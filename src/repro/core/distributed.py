@@ -117,6 +117,48 @@ def balance_task_split(row_counts: Sequence[int],
     return [np.sort(np.asarray(p, np.int64)) for p in parts if p]
 
 
+def balance_chain_split(row_counts: Sequence[int], chain_next,
+                        n_parts: int) -> List[np.ndarray]:
+    """`balance_task_split` over C-ladder CHAINS instead of single tasks.
+
+    A chain (task t, its `chain_next[t]` successor, and so on) must stay on
+    ONE device: the successor is seeded from the predecessor's alphas inside
+    the engine at convergence time.  Chains are therefore the atomic unit of
+    the LPT split, weighted by the sum of their members' row counts — a
+    chain runs its levels sequentially, so its load is the whole ladder's.
+    Returns sorted task-index arrays like `balance_task_split`.
+    """
+    counts = np.asarray(row_counts, np.int64)
+    nxt = np.asarray(chain_next, np.int64)
+    has_pred = np.zeros(len(counts), bool)
+    for s in nxt:
+        if s >= 0:
+            has_pred[s] = True
+    chains: List[List[int]] = []
+    for t in range(len(counts)):
+        if has_pred[t]:
+            continue
+        chain, u = [], t
+        while u >= 0:
+            chain.append(u)
+            u = int(nxt[u])
+        chains.append(chain)
+    weights = [sum(max(int(counts[t]), 1) for t in ch) for ch in chains]
+    groups = balance_task_split(weights, n_parts)
+    return [np.sort(np.concatenate([np.asarray(chains[int(ci)], np.int64)
+                                    for ci in g])) for g in groups]
+
+
+def _local_chain(chain_next, part: np.ndarray) -> Optional[np.ndarray]:
+    """Remap global `chain_next` onto one shard's local task indices."""
+    if chain_next is None:
+        return None
+    nxt = np.asarray(chain_next, np.int64)
+    local = {int(g): i for i, g in enumerate(part)}
+    return np.array([local.get(int(nxt[int(g)]), -1) for g in part],
+                    np.int64)
+
+
 class _DeviceWorkers:
     """One lightweight host worker per device for the overlapped task farm.
 
@@ -197,6 +239,7 @@ def solve_tasks_streamed(
     overlap: bool = True,
     return_stats: bool = False,
     epoch_fn=None,
+    chain_next=None,
 ):
     """Out-of-core stage-2 task farm over ``devices`` (host-resident G).
 
@@ -234,6 +277,7 @@ def solve_tasks_streamed(
         return solve_batch_streamed(G, tasks, config, stream_config=cfg,
                                     epoch_fn=epoch_fn,
                                     device=devices[0] if devices else None,
+                                    chain_next=chain_next,
                                     return_stats=return_stats)
 
     G = np.asarray(G, np.float32)
@@ -242,15 +286,19 @@ def solve_tasks_streamed(
     y = np.asarray(tasks.y, np.float32)
     c = np.asarray(tasks.c, np.float32)
     a0 = np.asarray(tasks.alpha0, np.float32)
-    parts = balance_task_split((c > 0.0).sum(axis=1), len(devices))
+    row_counts = (c > 0.0).sum(axis=1)
+    parts = (balance_chain_split(row_counts, chain_next, len(devices))
+             if chain_next is not None
+             else balance_task_split(row_counts, len(devices)))
     subs = [TaskBatch(idx[p], y[p], c[p], a0[p]) for p in parts]
+    sub_chains = [_local_chain(chain_next, p) for p in parts]
 
     if not overlap:
         results, per_dev = [], []
-        for d, sub in zip(devices, subs):
+        for d, sub, ch in zip(devices, subs, sub_chains):
             r, s = solve_batch_streamed(G, sub, config, stream_config=cfg,
                                         epoch_fn=epoch_fn, device=d,
-                                        return_stats=True)
+                                        chain_next=ch, return_stats=True)
             results.append(r)
             per_dev.append(s)
         res = _scatter_results(parts, results, T, idx.shape[1], rank)
@@ -275,8 +323,9 @@ def solve_tasks_streamed(
     # per device.
     scale_cache: dict = {}
     engines = [_Stage2Engine(G, sub, config, cfg, epoch_fn=epoch_fn,
-                             device=d, tile=tile, scale_cache=scale_cache)
-               for d, sub in zip(devices, subs)]
+                             device=d, tile=tile, scale_cache=scale_cache,
+                             chain_next=ch)
+               for d, sub, ch in zip(devices, subs, sub_chains)]
     workers = _DeviceWorkers(engines, depth=max(2, cfg.prefetch))
     reader = drive_streamed_engines(engines, G, config, cfg, tile=tile,
                                     fanout=workers)
@@ -299,6 +348,7 @@ def solve_tasks_streamed_mesh(
     stream_config=None,
     overlap: bool = True,
     return_stats: bool = False,
+    chain_next=None,
 ) -> SolveResult:
     """Out-of-core counterpart of `solve_tasks_sharded` over a mesh's LOCAL
     devices: the row-count-balanced task shards stream G row-blocks
@@ -307,6 +357,7 @@ def solve_tasks_streamed_mesh(
     return solve_tasks_streamed(G, tasks, config,
                                 devices=list(mesh.local_devices),
                                 stream_config=stream_config, overlap=overlap,
+                                chain_next=chain_next,
                                 return_stats=return_stats)
 
 

@@ -91,13 +91,18 @@ def ovo_decision_values(features: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
 
 def ovo_vote(decisions: np.ndarray, pairs: List[Tuple[int, int]],
              n_classes: int) -> np.ndarray:
-    """Majority vote over pairwise decisions -> (m,) class predictions."""
+    """Majority vote over pairwise decisions -> (m,) class predictions.
+
+    Vectorised over pairs: one scatter-add into the (m, n_classes) vote
+    table instead of a Python loop — the grid farm scores |gammas| x |Cs|
+    cells per search, so prediction is on the measured path now.
+    """
     decisions = np.asarray(decisions)
     m = decisions.shape[0]
+    pa = np.asarray([p[0] for p in pairs], np.int64)
+    pb = np.asarray([p[1] for p in pairs], np.int64)
+    winner = np.where(decisions > 0, pa[None, :], pb[None, :])   # (m, T)
     votes = np.zeros((m, n_classes), dtype=np.int32)
-    for t, (a, b) in enumerate(pairs):
-        pos = decisions[:, t] > 0
-        votes[pos, a] += 1
-        votes[~pos, b] += 1
+    np.add.at(votes, (np.repeat(np.arange(m), len(pairs)), winner.ravel()), 1)
     # np.argmax breaks ties towards the smaller index (LIBSVM behaviour)
     return np.argmax(votes, axis=1)

@@ -339,7 +339,7 @@ def solve_polished(
             for t, p in enumerate(pos_l):
                 af[t][p] = a_res[t][: len(p)]
 
-        visits = (sstats.kernel_calls * sstats.tile_rows if sstats is not None
+        visits = (sstats.coord_visits if sstats is not None
                   else int(np.asarray(res_l.epochs).sum()) * n_pad_l)
         gaps = np.full((T,), np.nan, np.float32)
         if gap_trace and final and not host_G:

@@ -39,23 +39,35 @@ the compute/drain time it is meant to hide, the in-flight queue is deepened.
 Shrinking follows `core/compact.py`'s bucket-compaction design, but here it
 cuts H2D *bytes*, not just FLOPs: after every full pass the union of active
 rows over all unconverged tasks is gathered host-side, and the cheap epochs
-stream only those rows.  Tasks are expressed in GLOBAL row coordinates
-(c = 0 rows are inert no-ops), which makes the streamed trajectory exactly
-the monolithic `solve_one` trajectory — blocks only re-chunk the same
-sequential coordinate sweep — so parity with `solve_batch` holds to float
-accumulation order, including shrinking counters and warm starts.
+stream only those rows.
+
+Task state is held in task-LOCAL streamed coordinates: per task, the sorted
+real (c > 0) global row ids plus (y, c, alpha, unchanged) vectors of that
+length, so host memory is O(sum task sizes) — not the O(T * n) a
+global-coordinate scatter would cost (a ~k/2 blowup for OVO, and a
+T/pairs-fold one for the CV-grid task farm where T = pairs x folds x |Cs|).
+Each streamed block touches a task through a `searchsorted` WINDOW: a
+precomputed per-task boundary table maps block b to the contiguous id slice
+lo:hi whose rows fall inside the block, the (hi - lo) block-local rows are
+gathered on device, and the epoch kernel sweeps only them — kernel work is
+O(sum task sizes) per pass too (`Stage2StreamStats.coord_visits`).  Sweeping
+a task's rows in sorted-global order is exactly what the inert-padded global
+sweep did, so the streamed trajectory still reproduces the monolithic
+`solve_one` trajectory to float accumulation order, including shrinking
+counters and warm starts.
 
 Requirements on the TaskBatch: each task's real (c > 0) rows must be unique;
 sorted idx (what `build_ovo_tasks`/`build_cv_tasks` produce) additionally
-gives trajectory-exact parity with the monolithic path.
+gives trajectory-exact parity with the monolithic path (unsorted idx is
+re-sorted internally — the sweep is global-row-ordered either way).
 
-Scaling note: global row coordinates cost O(T * n) HOST memory for the task
-state (y/c/alpha/unchanged) and stream every live task over every full-pass
-block.  For OVO that is a ~k/2 overhead versus task-local padding
-(n_pad ~ 2n/k) — negligible against the (n, B) G while 7*T << B, i.e. for
-the tens-of-classes regime this repo drives.  Hundreds of OVO classes want
-task-LOCAL streamed coordinates (per-block searchsorted windows into each
-task's sorted idx); see the ROADMAP open item.
+The task axis can also carry a C-LADDER: `chain_next[t] = s` declares task s
+the warm-start successor of task t over the same rows (the CV grid's next-C
+cell, `cv.build_cv_grid_tasks`).  Successor cells start dormant; when a
+predecessor converges at a full pass its alphas are clipped into the new box
+as the successor's seed, the successor's w0 accumulation rides the next
+shared full pass (the driver promotes it), and the retired cell stops
+consuming kernel calls — one G stream trains the whole grid.
 """
 from __future__ import annotations
 
@@ -74,7 +86,7 @@ import numpy as np
 
 from repro.core.block_cache import (HotRowBlockCache, block_key,
                                     stage2_cache_budget,
-                                    violation_recency_scores)
+                                    violation_recency_scores_tasks)
 from repro.core.dual_solver import (DELTA_EPS, Q_FLOOR, SolveResult,
                                     SolverConfig, TaskBatch)
 from repro.core.quant import (GROUP_ROWS, QuantBlock, dequant_rows,
@@ -228,6 +240,37 @@ def _upcast32(g):
     return g.astype(jnp.float32)
 
 
+@jax.jit
+def _window(gb, qb, rl):
+    """Device gather of one task's window out of a streamed block: the
+    (win,) block-local row ids ``rl`` select the task's rows (and their
+    precomputed q) so the epoch kernel sweeps only them."""
+    return gb[rl], qb[rl]
+
+
+@jax.jit
+def _gather_rows(gb, rl):
+    return gb[rl]
+
+
+def _win_pad(m: int) -> int:
+    """Pow2-bucketed device window length (floor 8): window kernels compile
+    once per bucket instead of once per ragged window size; pad rows carry
+    c = 0 and are inert in the epoch kernel."""
+    return max(8, 1 << (int(m) - 1).bit_length())
+
+
+def block_windows(ids: np.ndarray, tile: int, n_blocks: int) -> np.ndarray:
+    """Boundary table of a task's SORTED global row ids against the block
+    grid: entry b is the first position in ``ids`` at or past row b * tile,
+    so block b's window is the contiguous slice bounds[b]:bounds[b+1] and
+    its block-local rows are ids[lo:hi] - b * tile.  One O(m log m)
+    searchsorted per task at engine build; O(1) per (task, block) after —
+    the mapping that makes host state and kernel work O(sum task sizes)."""
+    edges = np.arange(n_blocks + 1, dtype=np.int64) * tile
+    return np.searchsorted(np.asarray(ids, np.int64), edges, side="left")
+
+
 def _put(a, device=None):
     """Deliberate H2D transfer of one bounded block.
 
@@ -287,8 +330,16 @@ class Stage2StreamStats:
     rows_streamed: int = 0            # sum of block rows over all epochs/passes
     blocks_streamed: int = 0
     kernel_calls: int = 0
+    coord_visits: int = 0             # real task-rows swept by epoch kernels
+                                      # (the windowed analogue of the
+                                      # monolithic epochs.sum() * task size)
     bytes_h2d: int = 0
     bytes_d2h: int = 0
+    bytes_g: int = 0                  # G-block component of bytes_h2d alone
+                                      # (shared-pass stages + compacted-epoch
+                                      # misses; excludes per-task vectors) —
+                                      # the figure the grid farm's "one pass
+                                      # set per grid" claim is asserted on
     bytes_scales: int = 0             # int8 codec scale-table bytes (already
                                       # included in bytes_h2d / bytes_put —
                                       # broken out so the exact-byte
@@ -432,14 +483,16 @@ class _BlockPipeline:
     ``prefetch`` is mutable — the overlap-autotune loop deepens it when the
     first full pass measures transfer lagging compute."""
 
-    def __init__(self, prefetch: int, a_g, u_g, stats):
+    def __init__(self, prefetch: int, a_r, u_r, stats):
         self.inflight = collections.deque()
         self.prefetch = max(1, prefetch)
-        self.a_g, self.u_g = a_g, u_g
+        self.a_r, self.u_r = a_r, u_r
         self.stats = stats
 
-    def push(self, sel, cnt, items):
-        self.inflight.append((sel, cnt, items))
+    def push(self, items):
+        if not items:
+            return
+        self.inflight.append(items)
         if len(self.inflight) >= self.prefetch:
             self._drain_one()
 
@@ -448,12 +501,15 @@ class _BlockPipeline:
             self._drain_one()
 
     def _drain_one(self):
-        sel, cnt, items = self.inflight.popleft()
+        items = self.inflight.popleft()
         t0 = time.perf_counter()
-        for t, a_ref, u_ref in items:
-            self.a_g[t][sel] = np.asarray(a_ref)[:cnt]
-            self.u_g[t][sel] = np.asarray(u_ref)[:cnt]
-            self.stats.bytes_d2h += 2 * cnt * BYTES_F32
+        for t, take, m, a_ref, u_ref in items:
+            # ``take`` addresses the window in the task-LOCAL arrays: a
+            # contiguous slice on full passes, an active-position gather on
+            # compacted cheap epochs.
+            self.a_r[t][take] = np.asarray(a_ref)[:m]
+            self.u_r[t][take] = np.asarray(u_ref)[:m]
+            self.stats.bytes_d2h += 2 * m * BYTES_F32
         self.stats.drain_seconds += time.perf_counter() - t0
 
 
@@ -467,22 +523,29 @@ def _padded(vec, fill, dtype, tile):
 
 class _Stage2Engine:
     """One device's streamed stage-2 state machine — the reusable per-epoch
-    block pass (row selection, q computation, SMO step, pipeline drain,
+    block pass (window selection, q computation, SMO step, pipeline drain,
     shrinking compaction) parameterised by (device, task shard, w state).
 
-    The engine owns its shard's host-side global-coordinate task state
-    (y/c/alpha/unchanged), the device-resident per-task w vectors, and the
-    in-flight block pipeline.  A driver (`drive_streamed_engines`) owns the
-    lockstep epoch schedule and feeds shared full-G passes block by block;
-    compacted cheap epochs run engine-locally (`run_cheap_epoch`) over the
-    shard's own active-row union.  Engines never count shared-pass G bytes —
-    the reader stages each block once and accounts for it once — only their
-    task-vector traffic and their own compacted-epoch gathers.
+    The engine owns its shard's host-side TASK-LOCAL coordinate state
+    (sorted real row ids + y/c/alpha/unchanged of each task's own length —
+    O(sum task sizes), never O(T * n)), the per-task `searchsorted` window
+    tables against the block grid, the device-resident per-task w vectors,
+    and the in-flight block pipeline.  A driver (`drive_streamed_engines`)
+    owns the lockstep epoch schedule and feeds shared full-G passes block by
+    block; compacted cheap epochs run engine-locally (`run_cheap_epoch`)
+    over the shard's own active-row union.  Engines never count shared-pass
+    G bytes — the reader stages each block once and accounts for it once —
+    only their task-vector traffic and their own compacted-epoch gathers.
+
+    ``chain_next`` lifts the task axis to warm-start LADDERS (the CV grid's
+    ascending-C cells): successor tasks start dormant, are seeded from their
+    converged predecessor's alphas, accumulate w0 during the next shared
+    full pass (`pending_init`), and only then join the live sweep.
     """
 
     def __init__(self, G, tasks: TaskBatch, config: SolverConfig,
                  cfg: StreamConfig, *, epoch_fn: Callable, device, tile: int,
-                 scale_cache: Optional[dict] = None):
+                 scale_cache: Optional[dict] = None, chain_next=None):
         self.G = G
         self.config, self.cfg = config, cfg
         self.epoch_fn, self.device, self.tile = epoch_fn, device, tile
@@ -495,25 +558,54 @@ class _Stage2Engine:
         self.T, self.n_pad = self.idx.shape
         T = self.T
 
-        # Scatter task-local vectors into global row coordinates: rows
-        # outside a task carry c = 0 and are inert, like monolithic padding.
-        self.y_g = np.ones((T, n), np.float32)
-        self.c_g = np.zeros((T, n), np.float32)
-        self.a_g = np.zeros((T, n), np.float32)
-        self.u_g = np.zeros((T, n), np.int32)
+        # Task-LOCAL streamed coordinates: per task, the globally sorted
+        # real (c > 0) rows and their solver state, plus the full-pass
+        # window boundary table against the block grid.  `scat` remembers
+        # each sorted row's position in the task's original padded layout
+        # for the result scatter.
         self.real_loc = self.c_loc > 0.0
+        self.n_blocks = math.ceil(n / tile)
+        self.ids: List[np.ndarray] = []
+        self.scat: List[np.ndarray] = []
+        self.y_r: List[np.ndarray] = []
+        self.c_r: List[np.ndarray] = []
+        self.a_r: List[np.ndarray] = []
+        self.u_r: List[np.ndarray] = []
+        self.bounds: List[np.ndarray] = []
         for t in range(T):
-            r = self.idx[t][self.real_loc[t]]
-            self.y_g[t, r] = self.y_loc[t][self.real_loc[t]]
-            self.c_g[t, r] = self.c_loc[t][self.real_loc[t]]
-            self.a_g[t, r] = np.clip(self.a0_loc[t][self.real_loc[t]], 0.0,
-                                     self.c_loc[t][self.real_loc[t]])
+            pos = np.where(self.real_loc[t])[0]
+            ids = self.idx[t][pos].astype(np.int64)
+            order = np.argsort(ids, kind="stable")
+            ids, pos = ids[order], pos[order]
+            self.ids.append(ids)
+            self.scat.append(pos)
+            self.y_r.append(np.ascontiguousarray(self.y_loc[t][pos]))
+            self.c_r.append(np.ascontiguousarray(self.c_loc[t][pos]))
+            self.a_r.append(np.clip(self.a0_loc[t][pos], 0.0, self.c_r[t]))
+            self.u_r.append(np.zeros(len(ids), np.int32))
+            self.bounds.append(block_windows(ids, tile, self.n_blocks))
+
+        # C-ladder lifecycle: cold roots sweep from epoch 0; warm roots ride
+        # the init pass first (pending); successor cells wait for their
+        # predecessor's converged alphas.  `active` means "has its w0 and is
+        # sweeping"; `first_sweep` anchors per-task LOCAL epoch counting so
+        # `epochs_used` matches what a standalone solve of the cell reports.
+        self.chain_next = (np.full((T,), -1, np.int64) if chain_next is None
+                           else np.asarray(chain_next, np.int64))
+        succ = {int(s) for s in self.chain_next if s >= 0}
+        root = [t not in succ for t in range(T)]
+        self.pending_init: List[int] = [t for t in range(T)
+                                        if root[t] and self.a_r[t].any()]
+        pend = set(self.pending_init)
+        self.active = np.array([root[t] and t not in pend
+                                for t in range(T)], bool)
+        self.first_sweep = np.zeros((T,), np.int32)
 
         self.stats = Stage2StreamStats(tile_rows=tile,
                                        block_dtype=cfg.block_dtype)
         self.w = [_put(np.zeros((rank,), np.float32), device)
                   for _ in range(T)]
-        self.pipe = _BlockPipeline(cfg.prefetch, self.a_g, self.u_g,
+        self.pipe = _BlockPipeline(cfg.prefetch, self.a_r, self.u_r,
                                    self.stats)
         self.done = np.zeros((T,), bool)
         self.violation = np.full((T,), np.inf, np.float32)
@@ -524,7 +616,13 @@ class _Stage2Engine:
         self.act_q: Optional[List[QuantBlock]] = None
         # ^ int8 wire: per-tile-block quantised shadow of the gather (encoded
         #   once per compaction, reused by every cheap epoch until the next)
-        self.blk_active = None                   # per-task block occupancy
+        self._cw: dict = {}
+        # ^ per-compaction task windows: t -> (take, pos, bounds) where
+        #   ``take`` indexes the task-local arrays at its ACTIVE rows,
+        #   ``pos`` their sorted positions in the union, and ``bounds`` the
+        #   searchsorted block table over pos (compacted analogue of
+        #   `self.bounds`); restricting a task to its compaction-time active
+        #   rows is trajectory-identical to sweeping them as kernel no-ops
         self.shrink_k = config.shrink_k if config.shrink else 1 << 30
         self._bf16 = cfg.block_dtype == "bf16"
         self._wire = cfg.block_dtype
@@ -547,19 +645,38 @@ class _Stage2Engine:
         self._act_keys: Optional[List[bytes]] = None
         self._act_sizes: Optional[List[int]] = None
         self._hit_mark = self._miss_mark = 0
-        self._warm = [t for t in range(T) if self.a_g[t].any()]
         self._epoch = -1
         self._epoch_mark = 0
         self._put_mark = self._drain_mark = 0.0
         self._kind = None
         self._live: List[int] = []
+        self._init_live: List[int] = []
         self._viol = {}
+
+    @property
+    def host_state_bytes(self) -> int:
+        """Host coordinate-state footprint: the O(sum task sizes) local
+        arrays plus the O(T * n / tile) window boundary tables — the memory
+        model the grid farm's T >> pairs regime depends on (asserted by the
+        memory-model test: no O(T * n) allocation)."""
+        per_task = sum(a.nbytes for arrs in (self.ids, self.scat, self.y_r,
+                                             self.c_r, self.a_r, self.u_r)
+                       for a in arrs)
+        return per_task + sum(b.nbytes for b in self.bounds)
 
     # ------------------------------------------------------------ scheduling
     @property
     def needs_init(self) -> bool:
         """Warm starts need w0 = (alpha0 * y) @ G before the first update."""
-        return bool(self._warm)
+        return bool(self.pending_init)
+
+    @property
+    def wants_full(self) -> bool:
+        """True while freshly seeded ladder successors wait for their w0
+        accumulation: it needs FULL row coverage, so the driver promotes the
+        next epoch to a shared full pass (the init windows ride the same
+        staged blocks — zero extra G traffic)."""
+        return bool(self.pending_init)
 
     @property
     def all_done(self) -> bool:
@@ -606,12 +723,17 @@ class _Stage2Engine:
     # ---------------------------------------------------------- shared passes
     def begin_pass(self, kind: str) -> None:
         """``kind``: "init" (warm-start w accumulation), "full" (violation-
-        collecting epoch), or "cheap" (uncompacted non-full epoch)."""
+        collecting epoch), "cheap" (uncompacted non-full epoch), or "compact"
+        (engine-local compacted epoch).  Pending ladder tasks ride any
+        FULL-COVERAGE pass (init/full/cheap — never compact) as pure
+        `_accum_w` windows and join the sweep from the next epoch."""
         self._kind = kind
+        self._init_live = list(self.pending_init) if kind != "compact" else []
         if kind == "init":
-            self._live = list(self._warm)
+            self._live = []
         else:
-            self._live = [t for t in range(self.T) if not self.done[t]]
+            self._live = [t for t in range(self.T)
+                          if self.active[t] and not self.done[t]]
         self._viol = {t: [] for t in self._live}
         self._put_mark = self.stats.put_seconds
         self._drain_mark = self.stats.drain_seconds
@@ -654,9 +776,9 @@ class _Stage2Engine:
             return dequant_rows(vals, scales, group)
         return _upcast32(payload) if self._bf16 else payload
 
-    def _put_vec(self, vec, fill, dtype):
+    def _put_vec(self, vec, fill, dtype, length):
         t0 = time.perf_counter()
-        b = _put(_padded(vec, fill, dtype, self.tile), self.device)
+        b = _put(_padded(np.asarray(vec), fill, dtype, length), self.device)
         self.stats.put_seconds += time.perf_counter() - t0
         self.stats.bytes_h2d += b.nbytes
         self.stats.bytes_put += b.nbytes
@@ -667,56 +789,115 @@ class _Stage2Engine:
         The G bytes were staged (and accounted) once by the reader; only this
         engine's task-vector traffic is counted here."""
         gb = self._put_block(gb_send)
-        if self._kind == "init":
-            for t in self._live:
-                ab = self._put_vec(self.a_g[t][sel], 0.0, np.float32)
-                yb = self._put_vec(self.y_g[t][sel], 1.0, np.float32)
-                self.w[t] = _accum_w(self.w[t], gb, ab, yb)
+        b = sel.start // self.tile
+        if self._init_live:
+            # Pending ladder tasks: accumulate w0 from the task's window of
+            # this block — w0 += (alpha * y) @ G[window] — while live tasks
+            # sweep the same staged bytes below.
+            for t in self._init_live:
+                lo, hi = int(self.bounds[t][b]), int(self.bounds[t][b + 1])
+                if lo == hi:
+                    continue
+                m = hi - lo
+                wl = _win_pad(m)
+                rl = (self.ids[t][lo:hi] - sel.start).astype(np.int32)
+                rlb = self._put_vec(rl, 0, np.int32, wl)
+                ab = self._put_vec(self.a_r[t][lo:hi], 0.0, np.float32, wl)
+                yb = self._put_vec(self.y_r[t][lo:hi], 1.0, np.float32, wl)
+                self.w[t] = _accum_w(self.w[t], _gather_rows(gb, rlb), ab, yb)
                 self.stats.kernel_calls += 1
+        if self._kind == "init" or not self._live:
             return
-        self._run_block(gb, sel, cnt, full=(self._kind == "full"),
-                        blk=None)
-
-    def _run_block(self, gb, sel, cnt, *, full: bool, blk) -> None:
         qb = _row_sq(gb)
+        base = sel.start
         items = []
         for t in self._live:
-            if blk is not None and not self.blk_active[t][blk]:
+            lo, hi = int(self.bounds[t][b]), int(self.bounds[t][b + 1])
+            if lo == hi:
                 continue
-            ab = self._put_vec(self.a_g[t][sel], 0.0, np.float32)
-            yb = self._put_vec(self.y_g[t][sel], 1.0, np.float32)
-            cb = self._put_vec(self.c_g[t][sel], 0.0, np.float32)
-            ub = self._put_vec(self.u_g[t][sel], 0, np.int32)
-            a2, u2, w2, viol = self.epoch_fn(
-                gb, yb, cb, qb, ab, ub, self.w[t],
-                full_pass=full, shrink_k=self.shrink_k)
-            self.w[t] = w2
-            items.append((t, a2, u2))
-            self.stats.kernel_calls += 1
-            if full:
-                self._viol[t].append(viol)
-        self.pipe.push(sel, cnt, items)
+            rl = (self.ids[t][lo:hi] - base).astype(np.int32)
+            items.append(self._sweep_window(gb, qb, t, slice(lo, hi), rl,
+                                            full=(self._kind == "full")))
+        self.pipe.push(items)
+
+    def _sweep_window(self, gb, qb, t, take, rl, *, full: bool):
+        """Run the epoch kernel over ONE task's window of a staged block:
+        gather the task's rows (and their q) on device, sweep only them.
+        ``take`` addresses the window in the task-LOCAL arrays (a contiguous
+        slice on full passes, an active-position gather on compacted
+        epochs); ``rl`` holds the block-local row ids.  Windows are padded
+        to a pow2 bucket (`_win_pad`) with inert c = 0 rows so kernels
+        compile per bucket, not per ragged size."""
+        m = len(rl)
+        wl = _win_pad(m)
+        rlb = self._put_vec(rl, 0, np.int32, wl)
+        gw, qw = _window(gb, qb, rlb)
+        ab = self._put_vec(self.a_r[t][take], 0.0, np.float32, wl)
+        yb = self._put_vec(self.y_r[t][take], 1.0, np.float32, wl)
+        cb = self._put_vec(self.c_r[t][take], 0.0, np.float32, wl)
+        ub = self._put_vec(self.u_r[t][take], 0, np.int32, wl)
+        a2, u2, w2, viol = self.epoch_fn(
+            gw, yb, cb, qw, ab, ub, self.w[t],
+            full_pass=full, shrink_k=self.shrink_k)
+        self.w[t] = w2
+        self.stats.kernel_calls += 1
+        self.stats.coord_visits += m
+        if full:
+            self._viol[t].append(viol)
+        return (t, take, m, a2, u2)
 
     def end_pass(self) -> None:
         self.pipe.flush()
+        newly = self._init_live
+        self._init_live = []
+        if self._kind == "full":
+            self.stats.full_passes += 1
+            for t in self._live:
+                # Empty generators (a task with no real rows, or none inside
+                # this shard's blocks) converge trivially — exactly what the
+                # old inert-padded sweep reported for them.
+                v = max((float(np.asarray(r)) for r in self._viol[t]),
+                        default=0.0)
+                self.violation[t] = v
+                if v < self.config.tol:
+                    self.done[t] = True
+                    self.epochs_used[t] = (self._epoch + 1
+                                           - self.first_sweep[t])
+                    s = int(self.chain_next[t])
+                    if (s >= 0 and not self.active[s] and not self.done[s]
+                            and s not in self.pending_init):
+                        # Seed the ladder successor: the converged cell's
+                        # alphas clipped into the next C box — the same
+                        # warm chain serial `grid_search` builds, but the
+                        # retired cell's farm slot frees immediately.
+                        self.a_r[s][:] = np.clip(self.a_r[t], 0.0,
+                                                 self.c_r[s])
+                        self.u_r[s][:] = 0
+                        if self.a_r[s].size and self.a_r[s].any():
+                            self.pending_init.append(s)
+                        else:
+                            self.active[s] = True
+                            self.first_sweep[s] = self._epoch + 1
+        # Promote tasks whose w0 finished accumulating THIS pass: they sweep
+        # from the next epoch and their local epoch count starts there.
+        for t in newly:
+            self.pending_init.remove(t)
+            self.active[t] = True
+            self.first_sweep[t] = self._epoch + 1
         if self._kind != "full":
             return
-        self.stats.full_passes += 1
-        for t in self._live:
-            v = max(float(np.asarray(r)) for r in self._viol[t])
-            self.violation[t] = v
-            if v < self.config.tol:
-                self.done[t] = True
-                self.epochs_used[t] = self._epoch + 1
         # Re-compact: cheap epochs stream only rows active for at least one
         # unconverged task — shrinking cuts H2D bytes, not just FLOPs.
         self.act, self.act_G, self.act_q = None, None, None
-        self.blk_active = None
+        self._cw = {}
         self._act_keys = self._act_sizes = None
-        live2 = [t for t in range(self.T) if not self.done[t]]
+        live2 = [t for t in range(self.T)
+                 if self.active[t] and not self.done[t]]
         if self.config.shrink and live2:
-            masks = (self.c_g[live2] > 0.0) & (self.u_g[live2] < self.shrink_k)
-            union = np.where(masks.any(axis=0))[0]
+            act_take = {t: np.where(self.u_r[t] < self.shrink_k)[0]
+                        for t in live2}
+            union = np.unique(np.concatenate(
+                [self.ids[t][act_take[t]] for t in live2]))
             self.stats.active_history.append(int(len(union)))
             if len(union) < self.n:
                 self.act = union
@@ -734,15 +915,18 @@ class _Stage2Engine:
                     self.act_G = (act_G.astype(BLOCK_DTYPES["bf16"])
                                   if self._bf16 else act_G)
                 n_blocks = math.ceil(max(len(union), 1) / self.tile)
-                # Block b of a cheap epoch covers GLOBAL rows
-                # act[b*tile:(b+1)*tile]; a task skips it only when none of
-                # those rows are active for it.
                 tile = self.tile
-                self.blk_active = {
-                    t: np.array([m[union[b * tile:(b + 1) * tile]].any()
-                                 for b in range(n_blocks)])
-                    for t, m in zip(live2, masks)
-                }
+                # Per-task compacted windows: each live task's ACTIVE rows
+                # mapped to their sorted union positions, with a
+                # searchsorted boundary table over those positions —
+                # restricting a task to its compaction-time active rows is
+                # trajectory-identical to sweeping them as kernel no-ops
+                # (an inactive row cannot reactivate between full passes).
+                for t in live2:
+                    ap = act_take[t]
+                    pos = np.searchsorted(union, self.ids[t][ap])
+                    self._cw[t] = (ap, pos,
+                                   block_windows(pos, tile, n_blocks))
                 if self.cache is not None:
                     # Re-plan the HBM pin set for the new union: keys are
                     # content-addressed by global row ids, so blocks whose
@@ -763,8 +947,10 @@ class _Stage2Engine:
                         self._act_sizes = [blk_nb] * n_blocks
                     self.cache.plan(
                         self._act_keys, self._act_sizes,
-                        violation_recency_scores(union, tile,
-                                                 self.u_g[live2], masks))
+                        violation_recency_scores_tasks(
+                            union, tile,
+                            [self.u_r[t][act_take[t]] for t in live2],
+                            [self.ids[t][act_take[t]] for t in live2]))
                     self.stats.cache_evictions = self.cache.evictions
         if self.cache is not None and self._act_keys is None:
             # No compaction to serve (union == n, all tasks converged, or
@@ -809,7 +995,7 @@ class _Stage2Engine:
         rows = self.act
         if rows is None or len(rows) == 0:
             return
-        self.begin_pass("cheap")
+        self.begin_pass("compact")
         tile = self.tile
         for b in range(math.ceil(len(rows) / tile)):
             s, e = b * tile, min((b + 1) * tile, len(rows))
@@ -829,6 +1015,7 @@ class _Stage2Engine:
                                            self.cfg.block_dtype, self._group,
                                            self._stage))
                 self.stats.bytes_h2d += gb_send.nbytes
+                self.stats.bytes_g += gb_send.nbytes
                 self.stats.bytes_miss += gb_send.nbytes
                 if isinstance(gb_send, QuantBlock):
                     self.stats.bytes_scales += gb_send.scale_bytes
@@ -837,7 +1024,23 @@ class _Stage2Engine:
                 if self.cache is not None:
                     self.stats.cache_misses += 1
                 gb = self._put_block(gb_send, cache_key=key)
-            self._run_block(gb, rows[s:e], e - s, full=False, blk=b)
+            qb = _row_sq(gb)
+            items = []
+            for t in self._live:
+                cw = self._cw.get(t)
+                if cw is None:
+                    continue
+                ap, pos, bnd = cw
+                lo, hi = int(bnd[b]), int(bnd[b + 1])
+                if lo == hi:
+                    continue
+                # ``take`` gathers the task-local arrays at the window's
+                # active positions; ``rl`` maps them to union-block rows.
+                take = ap[lo:hi]
+                rl = (pos[lo:hi] - s).astype(np.int32)
+                items.append(self._sweep_window(gb, qb, t, take, rl,
+                                                full=False))
+            self.pipe.push(items)
         self.pipe.flush()
 
     # -------------------------------------------------------------- results
@@ -849,9 +1052,11 @@ class _Stage2Engine:
         self.stats.bytes_d2h += W.nbytes
         alpha = np.zeros_like(self.a0_loc)
         for t in range(self.T):
-            alpha[t][self.real_loc[t]] = \
-                self.a_g[t][self.idx[t][self.real_loc[t]]]
-        dual = self.a_g.sum(axis=1) - 0.5 * (W * W).sum(axis=1)
+            alpha[t][self.scat[t]] = self.a_r[t]
+        asum = (np.array([self.a_r[t].sum() for t in range(self.T)],
+                         np.float32) if self.T
+                else np.zeros((0,), np.float32))
+        dual = asum - 0.5 * (W * W).sum(axis=1)
         n_sv = (alpha > 0.0).sum(axis=1).astype(np.int32)
         self.stats.epochs = self.epochs_run
         self.stats.prefetch_final = self.pipe.prefetch
@@ -901,6 +1106,7 @@ def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
         for sel, cnt, gb in iter_shared_blocks(G, tile, cfg.block_dtype,
                                                wire_group(tile, cfg), stage):
             reader.bytes_h2d += gb.nbytes
+            reader.bytes_g += gb.nbytes
             if isinstance(gb, QuantBlock):
                 reader.bytes_scales += gb.scale_bytes
             reader.blocks_streamed += 1
@@ -925,7 +1131,11 @@ def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
                 break
             for e in live:
                 e.start_epoch(epoch)
-            full = (epoch % period == 0) or not config.shrink
+            full = ((epoch % period == 0) or not config.shrink
+                    or any(e.wants_full for e in live))
+            # ^ freshly seeded C-ladder successors need a full-coverage pass
+            #   for their w0 accumulation — promote rather than let them
+            #   idle until the next scheduled full pass
             if full:
                 reader.epoch_bytes.append(shared_pass(live, "full"))
                 reader.full_passes += 1
@@ -977,17 +1187,20 @@ def merge_stream_stats(reader: Stage2StreamStats,
                             block_dtype=reader.block_dtype,
                             n_devices=n_devices)
     out.bytes_h2d = reader.bytes_h2d
+    out.bytes_g = reader.bytes_g
     out.bytes_scales = reader.bytes_scales
     out.blocks_streamed = reader.blocks_streamed
     out.rows_streamed = reader.rows_streamed
     for s in per_dev:
         out.bytes_h2d += s.bytes_h2d
+        out.bytes_g += s.bytes_g
         out.bytes_scales += s.bytes_scales
         out.bytes_put += s.bytes_put
         out.bytes_d2h += s.bytes_d2h
         out.blocks_streamed += s.blocks_streamed
         out.rows_streamed += s.rows_streamed
         out.kernel_calls += s.kernel_calls
+        out.coord_visits += s.coord_visits
         out.put_seconds += s.put_seconds
         out.drain_seconds += s.drain_seconds
         # Cache traffic is engine-local (compacted unions are partitioned
@@ -1026,17 +1239,20 @@ def solve_batch_streamed(
     stream_config: Optional[StreamConfig] = None,
     epoch_fn: Optional[Callable] = None,
     device=None,
+    chain_next=None,
     return_stats: bool = False,
 ):
     """Drop-in `solve_batch` over a host-resident G (numpy buffer).
 
     G row-blocks of `tile` rows stream through `epoch_fn` (the SMO epoch
     kernel contract) with per-task w chained on device; alpha/unchanged live
-    on host and are scattered back per block.  Returns a `SolveResult` whose
-    fields are host numpy arrays (same shapes/layout as `solve_batch`), plus
-    a `Stage2StreamStats` when ``return_stats=True``.  One-engine
-    instantiation of the shared engine/driver; the overlapped multi-device
-    farm lives in `core/distributed.py::solve_tasks_streamed`.
+    on host and are scattered back per block.  ``chain_next`` optionally
+    declares C-ladder warm-start chains over the task axis (see the module
+    docstring).  Returns a `SolveResult` whose fields are host numpy arrays
+    (same shapes/layout as `solve_batch`), plus a `Stage2StreamStats` when
+    ``return_stats=True``.  One-engine instantiation of the shared
+    engine/driver; the overlapped multi-device farm lives in
+    `core/distributed.py::solve_tasks_streamed`.
     """
     t_start = time.perf_counter()
     cfg = stream_config or StreamConfig()
@@ -1046,7 +1262,7 @@ def solve_batch_streamed(
     n, rank = G.shape
     tile = auto_tile_rows(n, rank, tasks.n_tasks, cfg)
     eng = _Stage2Engine(G, tasks, config, cfg, epoch_fn=epoch_fn,
-                        device=device, tile=tile)
+                        device=device, tile=tile, chain_next=chain_next)
     reader = drive_streamed_engines([eng], G, config, cfg, tile=tile)
     res, est = eng.result()
     if not return_stats:
@@ -1063,6 +1279,7 @@ def solve_streamed_auto(
     config: SolverConfig = SolverConfig(),
     *,
     stream_config: Optional[StreamConfig] = None,
+    chain_next=None,
     return_stats: bool = False,
 ):
     """The streamed stage-2 entry point every routed caller (`LPDSVM.fit`,
@@ -1078,6 +1295,8 @@ def solve_streamed_auto(
         return solve_tasks_streamed(G, tasks, config, devices=devices,
                                     stream_config=cfg,
                                     overlap=cfg.overlap_devices,
+                                    chain_next=chain_next,
                                     return_stats=return_stats)
     return solve_batch_streamed(G, tasks, config, stream_config=cfg,
+                                chain_next=chain_next,
                                 return_stats=return_stats)

@@ -156,6 +156,28 @@ def _report(svm):
               f"{len(tr.levels)} levels")
 
 
+def _report_grid(res, gammas, Cs):
+    """Per-grid summary for --grid-*: selection, errors, and — when the grid
+    task farm ran — the one-stream stats each gamma's whole (C x folds) grid
+    trained under."""
+    print(f"grid: {len(gammas)} gammas x {len(Cs)} Cs, "
+          f"{res.n_binary_solved} binary SVMs, "
+          f"stage1 {res.stage1_seconds:.2f}s stage2 {res.stage2_seconds:.2f}s")
+    for gi, gamma in enumerate(gammas):
+        errs = " ".join(f"{e:.4f}" for e in res.errors[gi])
+        line = f"  gamma {gamma:.4g}: err [{errs}]"
+        if res.stream_stats is not None and res.stream_stats[gi] is not None:
+            st = res.stream_stats[gi]
+            line += (f"  farm: {st.epochs} epochs, "
+                     f"{st.bytes_h2d / 2**20:.1f} MiB H2D "
+                     f"({st.bytes_g / 2**20:.1f} MiB G blocks), "
+                     f"{st.bytes_d2h / 2**20:.1f} MiB D2H, "
+                     f"tile {st.tile_rows} x {st.block_dtype}")
+        print(line)
+    print(f"grid best: gamma={res.best_gamma:.4g} C={res.best_C:.4g} "
+          f"err={res.best_error:.4f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -212,6 +234,17 @@ def main():
                          "pass is a short polish (core/polish.py)")
     ap.add_argument("--polish-levels", type=int, default=3,
                     help="depth of the polish ladder (default 3)")
+    ap.add_argument("--grid-cs", default=None,
+                    help="comma-separated C grid (e.g. '1,4,16'); with "
+                         "--grid-gammas runs the k-fold CV grid search "
+                         "instead of a single fit — when the cells stream, "
+                         "each gamma's whole (C x folds) grid trains as ONE "
+                         "task farm over a single G stream")
+    ap.add_argument("--grid-gammas", default=None,
+                    help="comma-separated gamma grid for --grid-cs "
+                         "(default: the median heuristic's single gamma)")
+    ap.add_argument("--grid-folds", type=int, default=3,
+                    help="CV folds for the grid search (default 3)")
     ap.add_argument("--libsvm", default=None,
                     help="train from a LIBSVM-format file instead of backbone "
                          "features (end-to-end out-of-core path)")
@@ -224,6 +257,10 @@ def main():
         ap.error(f"--tile-rows must be >= 0, got {args.tile_rows}")
     if args.polish_levels < 1:
         ap.error(f"--polish-levels must be >= 1, got {args.polish_levels}")
+    if args.grid_folds < 2:
+        ap.error(f"--grid-folds must be >= 2, got {args.grid_folds}")
+    if args.grid_gammas is not None and args.grid_cs is None:
+        ap.error("--grid-gammas requires --grid-cs")
 
     stream_config = None
     # An explicit chunk/tile size or wire dtype with no budget is a request
@@ -252,6 +289,8 @@ def main():
                                 if args.cache_budget_mb > 0 else None))
 
     if args.libsvm:
+        if args.grid_cs is not None:
+            ap.error("--grid-cs is not supported with --libsvm")
         return train_from_libsvm(args, stream_config)
 
     cfg = get_config(args.arch, reduced=True)
@@ -265,6 +304,30 @@ def main():
     if args.gamma is None:
         args.gamma = median_gamma(feats)
     n_tr = int(args.n * 0.8)
+
+    if args.grid_cs is not None:
+        from repro.core import grid_search
+        Cs = [float(v) for v in args.grid_cs.split(",")]
+        gammas = ([float(v) for v in args.grid_gammas.split(",")]
+                  if args.grid_gammas else [args.gamma])
+        t0 = time.time()
+        res = grid_search(feats[:n_tr], y[:n_tr], gammas, Cs,
+                          budget=args.budget, folds=args.grid_folds,
+                          stream=True if force else None,
+                          stream_config=stream_config, polish=args.polish,
+                          polish_levels=args.polish_levels)
+        print(f"features: {feats.shape} in {t_feat:.1f}s; "
+              f"grid search {time.time() - t0:.1f}s")
+        _report_grid(res, gammas, Cs)
+        svm = LPDSVM(KernelParams("rbf", gamma=res.best_gamma), C=res.best_C,
+                     budget=args.budget, tol=1e-2,
+                     stream=True if force else None,
+                     stream_config=stream_config)
+        svm.fit(feats[:n_tr], y[:n_tr])
+        err = svm.error(feats[n_tr:], y[n_tr:])
+        print(f"test error: {err:.4f} (chance {1 - 1/args.classes:.2f})")
+        return err
+
     svm = LPDSVM(KernelParams("rbf", gamma=args.gamma), C=args.C,
                  budget=args.budget, tol=1e-2,
                  stream=True if force else None,

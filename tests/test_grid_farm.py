@@ -1,0 +1,239 @@
+"""CV-grid task farm: the whole (C x folds x pair) grid in one G stream.
+
+Pins (a) `grid_search(farm=True)` == the per-cell serial loop — bit-equal
+errors matrix and the same selected (gamma, C) cell; (b) engine-level
+C-ladder parity: with every epoch a full pass the chained farm reproduces
+the serial warm-started C loop's per-cell alphas AND epoch counts bit-for-
+bit; (c) concurrent-mode cells are bit-identical to their cold solo solves
+under the DEFAULT shrink schedule while the whole grid's stage-2 G H2D
+bytes stay within 1.3x of ONE cell's pass set — the farm's headline; (d)
+chain-aware task splitting keeps warm-start ladders on one device and the
+2-device farm keeps the shared-pass byte invariance on chained grid tasks;
+(e) the engine's host coordinate state is O(sum task sizes), never
+O(T * n) — the memory model that lets T = |Cs| x folds x pairs scale.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core.solver_stream as ss
+from repro.core import (KernelParams, SolverConfig, StreamConfig, TaskBatch,
+                        balance_chain_split, build_cv_grid_tasks,
+                        compute_factor, grid_search, kfold_masks,
+                        solve_batch_streamed)
+from repro.core.cv import build_cv_tasks
+from repro.data import make_multiclass
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+CS = [1.0, 4.0, 16.0]
+
+
+def _problem(n=360, classes=3, budget=64, seed=11, folds=2):
+    x, y = make_multiclass(n, p=6, n_classes=classes, seed=seed)
+    _, labels = np.unique(y, return_inverse=True)
+    fac = compute_factor(jnp.asarray(x, jnp.float32),
+                         KernelParams("rbf", gamma=0.2), budget)
+    return np.asarray(fac.G), labels, kfold_masks(n, folds, seed=0)
+
+
+# ------------------------------------------------------- task construction
+
+def test_build_cv_grid_tasks_layout_and_chain():
+    """Level-major layout: cell (ci, f, t) at ci * FP + f * n_pairs + t;
+    the ladder chain links every cell to the SAME cell at the next C."""
+    _, labels, val_masks = _problem()
+    tasks, pairs, chain = build_cv_grid_tasks(labels, 3, CS, val_masks)
+    FP = len(val_masks) * len(pairs)
+    assert tasks.n_tasks == len(CS) * FP
+    for ci, C in enumerate(CS):
+        lvl, _ = build_cv_tasks(labels, 3, C, val_masks,
+                                n_pad=tasks.idx.shape[1])
+        sl = slice(ci * FP, (ci + 1) * FP)
+        np.testing.assert_array_equal(tasks.idx[sl], lvl.idx)
+        np.testing.assert_array_equal(tasks.c[sl], lvl.c)
+    np.testing.assert_array_equal(np.asarray(chain[:2 * FP]),
+                                  np.arange(2 * FP) + FP)
+    assert np.all(np.asarray(chain[2 * FP:]) == -1)
+    with pytest.raises(ValueError):
+        build_cv_grid_tasks(labels, 3, [4.0, 1.0], val_masks)
+    # no ladder -> concurrent roots, no chain
+    _, _, none_chain = build_cv_grid_tasks(labels, 3, CS, val_masks,
+                                           ladder=False)
+    assert none_chain is None
+
+
+def test_balance_chain_split_keeps_ladders_whole():
+    """Warm-start ladders must not cross device shards (the successor is
+    seeded from its predecessor's host alphas), and the split still LPT-
+    balances by CHAIN weight — one fat chain lands alone."""
+    counts = [100, 100, 5, 5, 5, 5]
+    chain = np.asarray([1, -1, 3, -1, 5, -1], np.int64)   # 0->1, 2->3, 4->5
+    parts = balance_chain_split(counts, chain, 2)
+    assert sorted(np.concatenate(parts).tolist()) == list(range(6))
+    fat = [p for p in parts if 0 in p]
+    assert len(fat) == 1 and sorted(fat[0].tolist()) == [0, 1]
+    loads = sorted(sum(counts[t] for t in p) for p in parts)
+    assert loads == [20, 200]
+
+
+# ------------------------------------------------------ grid_search parity
+
+def test_grid_search_farm_matches_serial():
+    """Farm vs pinned-serial grid_search: bit-equal errors matrix, same
+    selected cell — with every epoch a full pass the in-engine C ladder is
+    the serial warm-start loop in a different schedule."""
+    x, y = make_multiclass(360, p=6, n_classes=3, seed=3)
+    cfg = SolverConfig(tol=1e-2, max_epochs=200, full_pass_period=1)
+    scfg = StreamConfig(tile_rows=96)
+    kw = dict(budget=64, folds=2, config=cfg, stream=True,
+              stream_config=scfg)
+    serial = grid_search(x, y, [0.05, 0.2], CS, farm=False, **kw)
+    farm = grid_search(x, y, [0.05, 0.2], CS, farm=True, **kw)
+    np.testing.assert_array_equal(farm.errors, serial.errors)
+    assert (farm.best_gamma, farm.best_C) == (serial.best_gamma,
+                                              serial.best_C)
+    assert farm.n_binary_solved == serial.n_binary_solved
+    # the farm reports its per-gamma one-stream stats; serial has none
+    assert serial.stream_stats is None and serial.bytes_h2d is None
+    assert farm.stream_stats is not None and len(farm.stream_stats) == 2
+    assert all(st is not None and st.epochs > 0 for st in farm.stream_stats)
+    assert farm.bytes_h2d is not None and np.all(farm.bytes_h2d > 0)
+
+
+def test_ladder_epochs_and_alphas_match_serial_chain():
+    """Engine-level ladder parity under full_pass_period=1: per-cell alphas
+    AND epoch counts are bit-equal to the serial ascending-C loop that
+    warm-starts each cell from its predecessor."""
+    G, labels, val_masks = _problem()
+    cfg = SolverConfig(tol=1e-2, max_epochs=200, full_pass_period=1)
+    scfg = StreamConfig(tile_rows=96)
+    warm = None
+    ser_alpha, ser_epochs = [], []
+    for C in CS:
+        tasks, pairs = build_cv_tasks(labels, 3, C, val_masks, warm=warm)
+        res = solve_batch_streamed(G, tasks, cfg, stream_config=scfg)
+        warm = res.alpha
+        ser_alpha.append(np.asarray(res.alpha))
+        ser_epochs.append(np.asarray(res.epochs))
+    gtasks, pairs, chain = build_cv_grid_tasks(labels, 3, CS, val_masks)
+    farm_cfg = dataclasses.replace(
+        cfg, max_epochs=cfg.max_epochs * len(CS) + len(CS))
+    fres = solve_batch_streamed(G, gtasks, farm_cfg, stream_config=scfg,
+                                chain_next=chain)
+    FP = len(val_masks) * len(pairs)
+    for ci in range(len(CS)):
+        sl = slice(ci * FP, (ci + 1) * FP)
+        np.testing.assert_array_equal(np.asarray(fres.alpha)[sl],
+                                      ser_alpha[ci])
+        np.testing.assert_array_equal(np.asarray(fres.epochs)[sl],
+                                      ser_epochs[ci])
+
+
+def test_concurrent_farm_bit_equal_and_one_pass_set_of_g_bytes():
+    """Concurrent mode (no ladder) under the DEFAULT shrink schedule: every
+    cell's trajectory is bit-identical to its cold solo solve — windows
+    restrict each task to its own rows — and the WHOLE grid's stage-2 G
+    H2D bytes stay within 1.3x of the largest single cell's pass set."""
+    G, labels, val_masks = _problem()
+    cfg = SolverConfig(tol=1e-2, max_epochs=300)
+    scfg = StreamConfig(tile_rows=96)
+    cell_alpha, cell_epochs, cell_g = [], [], []
+    for C in CS:
+        tasks, pairs = build_cv_tasks(labels, 3, C, val_masks)
+        res, st = solve_batch_streamed(G, tasks, cfg, stream_config=scfg,
+                                       return_stats=True)
+        cell_alpha.append(np.asarray(res.alpha))
+        cell_epochs.append(np.asarray(res.epochs))
+        cell_g.append(st.bytes_g)
+    gtasks, pairs, chain = build_cv_grid_tasks(labels, 3, CS, val_masks,
+                                               ladder=False)
+    fres, fst = solve_batch_streamed(G, gtasks, cfg, stream_config=scfg,
+                                     chain_next=chain, return_stats=True)
+    FP = len(val_masks) * len(pairs)
+    for ci in range(len(CS)):
+        sl = slice(ci * FP, (ci + 1) * FP)
+        np.testing.assert_array_equal(np.asarray(fres.alpha)[sl],
+                                      cell_alpha[ci])
+        np.testing.assert_array_equal(np.asarray(fres.epochs)[sl],
+                                      cell_epochs[ci])
+    # the acceptance bound: one G stream serves the whole grid
+    assert fst.bytes_g <= 1.3 * max(cell_g), (fst.bytes_g, cell_g)
+    assert fst.bytes_g > 0
+
+
+# ------------------------------------------------------------ memory model
+
+def test_host_state_is_o_sum_task_sizes_not_t_times_n():
+    """T >> pairs regime: many small tasks over a large G must cost the
+    engine O(sum task sizes) host state, NOT O(T * n) — the old global-
+    coordinate layout would allocate six (T, n) arrays here."""
+    n, rank, T, size = 4096, 8, 128, 16
+    G = np.zeros((n, rank), np.float32)
+    rng = np.random.default_rng(0)
+    idx = np.stack([np.sort(rng.choice(n, size, replace=False))
+                    for _ in range(T)]).astype(np.int32)
+    tasks = TaskBatch(idx=jnp.asarray(idx),
+                      y=jnp.ones((T, size), jnp.float32),
+                      c=jnp.full((T, size), 4.0, jnp.float32),
+                      alpha0=jnp.zeros((T, size), jnp.float32))
+    eng = ss._Stage2Engine(G, tasks, SolverConfig(), StreamConfig(),
+                           epoch_fn=ss.default_epoch_fn,
+                           device=jax.devices()[0], tile=512)
+    # well under even ONE (T, n) f32 array (= 4 * T * n bytes)
+    assert eng.host_state_bytes < T * n, (eng.host_state_bytes, T * n)
+    # and dominated by the task-local arrays, i.e. linear in sum sizes
+    assert eng.host_state_bytes < 64 * T * size + 16 * T * (eng.n_blocks + 1)
+
+
+# ------------------------------------------------------ multi-device farm
+
+def test_grid_farm_2dev_shared_bytes_invariant():
+    """2-device subprocess on CHAINED grid tasks: per-task results match the
+    single-device farm bit-for-bit (chains never cross shards) and the
+    shared reader's first-full-pass bytes are device-count independent."""
+    code = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import (KernelParams, SolverConfig, StreamConfig,
+                        build_cv_grid_tasks, compute_factor, kfold_masks,
+                        solve_batch_streamed, solve_tasks_streamed)
+from repro.data import make_multiclass
+
+x, y = make_multiclass(360, p=6, n_classes=3, seed=11)
+_, labels = np.unique(y, return_inverse=True)
+fac = compute_factor(jnp.asarray(x, jnp.float32),
+                     KernelParams("rbf", gamma=0.2), 64)
+G = np.asarray(fac.G)
+val_masks = kfold_masks(360, 2, seed=0)
+gtasks, pairs, chain = build_cv_grid_tasks(labels, 3, [1.0, 4.0, 16.0],
+                                           val_masks)
+cfg = SolverConfig(tol=1e-2, max_epochs=650, full_pass_period=1)
+scfg = StreamConfig(tile_rows=96)
+devs = jax.local_devices()
+assert len(devs) == 2
+
+one, st1 = solve_batch_streamed(G, gtasks, cfg, stream_config=scfg,
+                                chain_next=chain, return_stats=True)
+two, st2 = solve_tasks_streamed(G, gtasks, cfg, devices=devs,
+                                stream_config=scfg, chain_next=chain,
+                                return_stats=True)
+np.testing.assert_array_equal(np.asarray(two.alpha), np.asarray(one.alpha))
+np.testing.assert_array_equal(np.asarray(two.epochs),
+                              np.asarray(one.epochs))
+assert st2.epoch_bytes[0] == st1.epoch_bytes[0], \
+    (st2.epoch_bytes[0], st1.epoch_bytes[0])
+assert len(st2.per_device) == 2
+print("GRID-MESH-OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "GRID-MESH-OK" in out.stdout

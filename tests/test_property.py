@@ -20,6 +20,7 @@ from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
 from repro.core.quant import (GROUP_ROWS, dequantize_rows, encode_rows,
                               expand_scales, group_scales, max_quant_error,
                               quantize_rows)
+from repro.core.solver_stream import block_windows
 from repro.data import write_libsvm, read_libsvm
 
 hypothesis.settings.register_profile(
@@ -141,6 +142,39 @@ def test_quant_global_scale_gather_invariance(n, p, group, pyrng):
     gather_dec = vals_gather.astype(np.float32) * srow[:, 0:1] + srow[:, 1:2]
     np.testing.assert_array_equal(vals_gather, vals_full[rows])
     np.testing.assert_array_equal(gather_dec, full_dec[rows])
+
+
+# ------------------------------------- task-local searchsorted windows
+
+@given(st.integers(1, 400), st.integers(1, 64), st.floats(0.0, 1.0),
+       st.randoms(use_true_random=False))
+def test_block_windows_roundtrip(n, tile, density, pyrng):
+    """For ANY (row count, tile size, task row subset) — ragged last tile,
+    empty windows, empty tasks included: every window's rows belong to its
+    block, block-local rows stay in [0, tile), and re-assembling
+    b * tile + local over all blocks reproduces the task's sorted global
+    ids exactly (the global <-> local coordinate roundtrip the streamed
+    engine's O(sum task sizes) state rests on)."""
+    rng = np.random.default_rng(pyrng.randint(0, 2**31))
+    k = int(round(density * n))
+    ids = np.sort(rng.choice(n, size=k, replace=False)).astype(np.int64)
+    n_blocks = -(-n // tile)
+    bounds = block_windows(ids, tile, n_blocks)
+    assert bounds.shape == (n_blocks + 1,)
+    assert bounds[0] == 0 and bounds[-1] == len(ids)
+    assert np.all(np.diff(bounds) >= 0)           # windows partition ids
+    rebuilt = []
+    for b in range(n_blocks):
+        lo, hi = int(bounds[b]), int(bounds[b + 1])
+        win = ids[lo:hi]
+        local = win - b * tile
+        assert np.all((local >= 0) & (local < tile))
+        # rows outside the window really are outside the block
+        others = np.concatenate([ids[:lo], ids[hi:]])
+        assert not np.any((others >= b * tile) & (others < (b + 1) * tile))
+        rebuilt.append(b * tile + local)
+    np.testing.assert_array_equal(np.concatenate(rebuilt) if rebuilt
+                                  else np.empty(0, np.int64), ids)
 
 
 # -------------------------------------------- hot-row block cache planning
