@@ -6,7 +6,9 @@
 #                    BENCH_streaming.json + BENCH_stage2_stream.json +
 #                    BENCH_stage2_mesh.json + BENCH_polish.json +
 #                    BENCH_cv_grid.json
-#   make bench-smoke same suites at smoke sizes (fast CI loop)
+#   make bench-smoke same suites at smoke sizes (fast CI loop) + the
+#                    observability smoke (trace coverage / no-op / overhead)
+#   make trace-smoke just the observability smoke -> /tmp/trace_smoke.json
 #   make bench-all   every benchmark suite (paper tables + streaming)
 #   make lint        byte-compile + import smoke over all python trees
 #
@@ -16,7 +18,7 @@
 PY       ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-mesh bench bench-smoke bench-all lint
+.PHONY: test test-mesh bench bench-smoke bench-all trace-smoke lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -38,7 +40,14 @@ bench-smoke:
 	BENCH_STAGE2_MESH_JSON=/tmp/BENCH_stage2_mesh.smoke.json \
 	BENCH_POLISH_JSON=/tmp/BENCH_polish.smoke.json \
 	BENCH_CV_GRID_JSON=/tmp/BENCH_cv_grid.smoke.json \
-	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish table3
+	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish table3 \
+	trace_smoke
+
+# streamed fit under a Tracer: asserts >=1 span per core pipeline category
+# in the exported Chrome-trace JSON, zero events on the disabled path, and
+# bounded NULL-tracer overhead
+trace-smoke:
+	$(PY) -m benchmarks.run trace_smoke
 
 bench-all:
 	$(PY) -m benchmarks.run

@@ -1,12 +1,37 @@
-"""Shared benchmark plumbing: CSV emission in `name,us_per_call,derived`."""
+"""Shared benchmark plumbing: CSV emission in `name,us_per_call,derived`
+plus the provenance stamp every ``BENCH_*.json`` payload carries."""
 from __future__ import annotations
 
+import socket
+import subprocess
 import time
 from typing import Callable
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def provenance() -> dict:
+    """Environment stamp for BENCH records: a number without the machine,
+    backend, and commit that produced it cannot anchor a trajectory."""
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    devs = jax.local_devices()
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else None,
+        "device_count": len(devs),
+        "hostname": socket.gethostname(),
+        "git_sha": sha,
+    }
 
 
 def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, provenance, timeit
 from repro.core import (KernelParams, SolverConfig, StreamConfig,
                         compute_factor, make_schedule, solve_batch,
                         solve_batch_streamed, solve_polished)
@@ -163,6 +163,7 @@ def run() -> None:
     payload = {"benchmark": "polish",
                "backend": jax.default_backend(),
                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+               "provenance": provenance(),
                "config": {"tol": CONFIG.tol, "max_epochs": CONFIG.max_epochs,
                           "schedule": {"fractions": make_schedule(3).fractions,
                                        "tol_factors":

@@ -13,7 +13,7 @@ import sys
 def main() -> None:
     from benchmarks import (eigdrop, fig3_stages, kernel_micro, polish,
                             shrinking, stage2_mesh, stage2_stream, streaming,
-                            table2_solvers, table3_cv_grid)
+                            table2_solvers, table3_cv_grid, trace_smoke)
     suites = {
         "table2": table2_solvers.run,
         "table3": table3_cv_grid.run,
@@ -25,6 +25,7 @@ def main() -> None:
         "stage2": stage2_stream.run,
         "stage2_mesh": stage2_mesh.run,
         "polish": polish.run,
+        "trace_smoke": trace_smoke.run,
     }
     picked = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

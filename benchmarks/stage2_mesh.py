@@ -91,7 +91,7 @@ def _worker(n_dev: int) -> None:
 
 
 def run() -> None:
-    from benchmarks.common import emit
+    from benchmarks.common import emit, provenance
 
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
@@ -138,6 +138,7 @@ def run() -> None:
     payload = {"benchmark": "stage2_mesh",
                "backend": "cpu",        # workers force host devices
                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+               "provenance": provenance(),
                "problem": {"n": PROBLEM[0], "budget": PROBLEM[1],
                            "classes": PROBLEM[2], "max_epochs": PROBLEM[3],
                            "tile_rows": TILE},

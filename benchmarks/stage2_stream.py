@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, provenance, timeit
 from repro.core import (KernelParams, SolverConfig, StreamConfig,
                         compute_factor, solve_batch, solve_batch_streamed)
 from repro.core.ovo import build_ovo_tasks
@@ -101,8 +101,8 @@ def run() -> None:
                     # effective host->device throughput: physical DMA bytes
                     # over the host time spent inside puts (the quantised
                     # wire's point: same rows, fewer bytes, higher effective
-                    # rows/s)
-                    gbps = st.bytes_put / max(st.put_seconds, 1e-9) / 1e9
+                    # rows/s) -- the shared Stage2StreamStats property
+                    gbps = st.h2d_gbps
                     tag = "cached" if cached else "nocache"
                     emit(f"stage2_stream_n{n}_B{rank}_t{tile}_{dtype}_{tag}",
                          t * 1e6,
@@ -121,6 +121,8 @@ def run() -> None:
                                     "cache_resident_bytes":
                                         st.cache_resident_bytes,
                                     "h2d_gbps": gbps,
+                                    "overlap_efficiency":
+                                        st.overlap_efficiency,
                                     "epochs": st.epochs,
                                     "full_passes": st.full_passes,
                                     "epoch_bytes": st.epoch_bytes,
@@ -165,6 +167,7 @@ def run() -> None:
     payload = {"benchmark": "stage2_streaming",
                "backend": jax.default_backend(),
                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+               "provenance": provenance(),
                "records": records}
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)

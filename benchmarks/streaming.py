@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, provenance, timeit
 from repro.core import KernelParams, StreamConfig, auto_chunk_rows
 from repro.core.kernel_fn import gram
 from repro.core.nystrom import _eig_projector, select_landmarks
@@ -87,7 +87,7 @@ def run() -> None:
 
                     t = timeit(chunked)
                     st = holder["st"]
-                    gbps = st.bytes_h2d / max(st.put_seconds, 1e-9) / 1e9
+                    gbps = st.h2d_gbps
                     emit(f"stage1_stream_n{n}_B{budget}_c{chunk}_pf{pf}"
                          f"_{dtype}", t * 1e6,
                          f"{n / t:.0f} rows/s "
@@ -98,7 +98,9 @@ def run() -> None:
                                     "seconds": t, "rows_per_s": n / t,
                                     "bytes_h2d": st.bytes_h2d,
                                     "bytes_scales": st.bytes_scales,
-                                    "h2d_gbps": gbps})
+                                    "h2d_gbps": gbps,
+                                    "overlap_efficiency":
+                                        st.overlap_efficiency})
                     if dtype == "f32":
                         wire0 = st.bytes_h2d
                     elif wire0 is not None:
@@ -116,6 +118,7 @@ def run() -> None:
     payload = {"benchmark": "stage1_streaming",
                "backend": jax.default_backend(),
                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+               "provenance": provenance(),
                "records": records}
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)

@@ -31,7 +31,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, provenance
 from repro.core import (KernelParams, LPDSVM, SolverConfig, StreamConfig,
                         build_cv_grid_tasks, compute_factor, grid_search,
                         kfold_masks, solve_batch_streamed)
@@ -198,6 +198,7 @@ def run() -> None:
     payload = {"benchmark": "cv_grid",
                "backend": jax.default_backend(),
                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+               "provenance": provenance(),
                "records": records}
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)

@@ -31,6 +31,10 @@ from repro.core.streaming import (Stage1StreamStats, StreamConfig,
                                   compute_factor_streamed_csr,
                                   default_gram_q8_fn, should_stream,
                                   stream_factor_blocks, stream_factor_rows)
+from repro.core.trace import (NULL, NullTracer, ProgressPrinter, Tracer,
+                              install, uninstall)
+from repro.core.trace import active as active_tracer
+from repro.core.trace import resolve as resolve_tracer
 
 __all__ = [
     "HotRowBlockCache", "block_key", "stage2_cache_budget",
@@ -55,4 +59,6 @@ __all__ = [
     "compute_factor_streamed", "compute_factor_streamed_csr",
     "default_gram_q8_fn", "should_stream", "stream_factor_blocks",
     "stream_factor_rows",
+    "NULL", "NullTracer", "ProgressPrinter", "Tracer", "install", "uninstall",
+    "active_tracer", "resolve_tracer",
 ]

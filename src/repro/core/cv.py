@@ -15,7 +15,6 @@ SVMs ... far more parallelism than we need".
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -29,6 +28,7 @@ from repro.core.ovo import build_ovo_tasks, class_pairs, ovo_vote
 from repro.core.polish import PolishSchedule, make_schedule, solve_polished
 from repro.core.solver_stream import route_stage2, solve_streamed_auto
 from repro.core.streaming import StreamConfig
+from repro.core.trace import resolve as resolve_tracer
 
 
 def _solve_routed(factor: LowRankFactor, tasks: TaskBatch,
@@ -259,15 +259,16 @@ def grid_search(
     gamma_stats: List = [None] * len(gammas)
     gamma_bytes = np.zeros((len(gammas),), np.int64)
 
+    tr = resolve_tracer(getattr(stream_config, "trace", None))
     warm_first_c = None       # cross-gamma seed (beyond-paper)
     for gi, gamma in enumerate(gammas):
         kp = KernelParams(kind=kernel_kind, gamma=float(gamma))
-        t0 = time.perf_counter()
+        t0 = tr.begin()
         factor = compute_factor(x, kp, budget,
                                 key=jax.random.PRNGKey(seed), gram_fn=gram_fn,
                                 stream=stream, stream_config=stream_config)
         wait_for_factor(factor.G)
-        t_stage1 += time.perf_counter() - t0
+        t_stage1 += tr.end("cv", "stage1_factor", t0, gamma=float(gamma))
 
         warm = warm_first_c if warm_start_gamma else None
         use_farm = False
@@ -284,7 +285,7 @@ def grid_search(
             # pair) cell of this gamma — the C-ladder runs inside the
             # engine, so the epoch budget covers the whole ladder (the +1
             # per level pays each seeded cell's w0-accumulation pass).
-            t0 = time.perf_counter()
+            t0 = tr.begin()
             FP = folds * len(pairs)
             farm_cfg = dataclasses.replace(
                 config, max_epochs=config.max_epochs * len(Cs) + len(Cs))
@@ -292,7 +293,8 @@ def grid_search(
                 factor.G, gtasks, farm_cfg, stream_config=stream_config,
                 chain_next=chain, return_stats=True)
             wait_for_factor(res.w)
-            dt = time.perf_counter() - t0
+            dt = tr.end("cv", "grid_farm", t0, gamma=float(gamma),
+                        cells=gtasks.n_tasks)
             t_stage2 += dt
             cell_sec[gi, :] = dt / len(Cs)
             n_solved += gtasks.n_tasks
@@ -311,13 +313,14 @@ def grid_search(
 
         val_sets = _fold_val_sets(factor, labels, val_masks)
         for ci, C in enumerate(Cs):
-            t0 = time.perf_counter()
+            t0 = tr.begin()
             tasks, _ = build_cv_tasks(labels, n_classes, C, val_masks,
                                       warm=warm if warm_start else None)
             res = _solve_routed(factor, tasks, config, solve_fn,
                                 stream, stream_config, polish_schedule)
             wait_for_factor(res.w)
-            dt = time.perf_counter() - t0
+            dt = tr.end("cv", "grid_cell", t0, gamma=float(gamma),
+                        C=float(C))
             t_stage2 += dt
             cell_sec[gi, ci] = dt
             n_solved += tasks.n_tasks

@@ -43,6 +43,7 @@ from repro.compat import shard_map
 
 from repro.core.dual_solver import SolveResult, SolverConfig, TaskBatch, solve_batch
 from repro.core.kernel_fn import KernelParams, apply_epilogue
+from repro.core.trace import resolve as resolve_tracer
 
 
 def _mesh_size(mesh: Mesh, axes: Sequence[str]) -> int:
@@ -168,24 +169,43 @@ class _DeviceWorkers:
     compute, and D2H overlap ACROSS devices.  The bound gives backpressure:
     the reader stalls instead of staging unboundedly many host buffers when
     one device falls behind.  Worker exceptions surface at the next barrier.
+
+    With an enabled tracer the farm's two stall signals become spans: the
+    reader's ``queue/backpressure`` (blocked pushing into a full device
+    queue — that device is the bottleneck) and each worker's
+    ``queue/worker_idle`` (blocked waiting for the reader — the shared
+    reader is the bottleneck), plus a per-device queue-depth gauge.
     """
 
-    def __init__(self, engines, depth: int):
+    def __init__(self, engines, depth: int, trace=None,
+                 names: Optional[Sequence[str]] = None):
+        self._tr = resolve_tracer(trace)
+        if names is None:
+            names = [f"dev{i}" for i in range(len(engines))]
+        self._names = {id(e): nm for e, nm in zip(engines, names)}
         self._queues = {id(e): queue.Queue(maxsize=max(2, depth))
                         for e in engines}
         self._errors: List[BaseException] = []
         self._threads = []
-        for q in self._queues.values():
-            th = threading.Thread(target=self._loop, args=(q,), daemon=True)
+        for e in engines:
+            nm = self._names[id(e)]
+            th = threading.Thread(target=self._loop,
+                                  args=(self._queues[id(e)], nm),
+                                  name=f"worker/{nm}", daemon=True)
             th.start()
             self._threads.append(th)
 
-    def _loop(self, q):
+    def _loop(self, q, name):
+        tr = self._tr
         while True:
+            t0 = tr.begin()
             fn = q.get()
             try:
                 if fn is None:
                     return
+                if tr.enabled:
+                    tr.end("queue", "worker_idle", t0, device=name)
+                    tr.counter(f"queue_depth/{name}", q.qsize())
                 if not self._errors:     # fail fast: drain the rest as no-ops
                     fn()
             except BaseException as exc:   # noqa: BLE001 — re-raised at barrier
@@ -194,7 +214,16 @@ class _DeviceWorkers:
                 q.task_done()
 
     def submit(self, engine, fn):
-        self._queues[id(engine)].put(fn)
+        q = self._queues[id(engine)]
+        tr = self._tr
+        if tr.enabled and q.full():
+            # Reader blocked on a full device queue — measured backpressure.
+            t0 = tr.begin()
+            q.put(fn)
+            tr.end("queue", "backpressure", t0,
+                   device=self._names[id(engine)])
+        else:
+            q.put(fn)
 
     def barrier(self):
         for q in self._queues.values():
@@ -326,7 +355,9 @@ def solve_tasks_streamed(
                              device=d, tile=tile, scale_cache=scale_cache,
                              chain_next=ch)
                for d, sub, ch in zip(devices, subs, sub_chains)]
-    workers = _DeviceWorkers(engines, depth=max(2, cfg.prefetch))
+    workers = _DeviceWorkers(engines, depth=max(2, cfg.prefetch),
+                             trace=cfg.trace,
+                             names=[f"dev{i}" for i in range(len(engines))])
     reader = drive_streamed_engines(engines, G, config, cfg, tile=tile,
                                     fanout=workers)
     pairs = [e.result() for e in engines]

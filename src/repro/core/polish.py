@@ -51,7 +51,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time
 from typing import Callable, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -64,6 +63,7 @@ from repro.core.solver_stream import (Stage2StreamStats, route_stage2,
                                       solve_batch_streamed,
                                       solve_streamed_auto)
 from repro.core.streaming import StreamConfig
+from repro.core.trace import resolve as resolve_tracer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,6 +241,7 @@ def solve_polished(
     solve_fn: Callable = solve_batch,
     gap_trace: bool = True,
     return_trace: bool = False,
+    trace=None,
 ):
     """Coarse-to-fine warm-started drop-in for the routed stage-2 solve.
 
@@ -261,6 +262,9 @@ def solve_polished(
     T, n_pad = idx.shape
     af = np.clip(np.asarray(tasks.alpha0, np.float32), 0.0, c_loc)
 
+    # `trace` observes only; level ROUTING still keys off `stream_config`
+    tr = resolve_tracer(trace if trace is not None
+                        else getattr(stream_config, "trace", None))
     sel = _level_positions(idx, y_loc, c_loc, schedule, n)
     # Drop redundant coarse levels (min_rows flooring can make a level equal
     # its successor; nested prefixes => equal sizes means equal sets).
@@ -281,7 +285,7 @@ def solve_polished(
     for li in keep:
         frac = schedule.fractions[li]
         final = frac >= 1.0
-        t0 = time.perf_counter()
+        t0 = tr.begin()
         sstats = None
         if final:
             tasks_l = TaskBatch(idx=tasks.idx, y=tasks.y, c=tasks.c,
@@ -366,11 +370,14 @@ def solve_polished(
                     # quantity the tolerance annealing drives toward zero
                     gaps[t] = task_duality_gap(G_np[idx_l[t, :k]], y_l[t, :k],
                                                c_l[t, :k], a_np[t][:k])
+        dt = tr.end("polish", f"level_{li}", t0, fraction=float(frac),
+                    tol=float(cfg_l.tol), rows=n_rows_l,
+                    streamed=streamed, row_visits=visits)
         trace.levels.append(PolishLevelStats(
             fraction=frac, tol=cfg_l.tol, n_rows=n_rows_l, n_pad=n_pad_l,
             streamed=streamed, epochs=np.asarray(res_l.epochs),
             violations=np.asarray(res_l.violation), duality_gap=gaps,
-            row_visits=visits, seconds=time.perf_counter() - t0,
+            row_visits=visits, seconds=dt,
             stream_stats=sstats))
 
     return (res, trace) if return_trace else res

@@ -92,6 +92,7 @@ from repro.core.dual_solver import (DELTA_EPS, Q_FLOOR, SolveResult,
 from repro.core.quant import (GROUP_ROWS, QuantBlock, dequant_rows,
                               encode_rows, group_scales, quantize_block)
 from repro.core.streaming import BYTES_F32, StreamConfig, tune_prefetch
+from repro.core.trace import resolve as resolve_tracer
 
 _H2D_GUARD = getattr(jax, "transfer_guard_host_to_device", None)
 
@@ -382,6 +383,23 @@ class Stage2StreamStats:
         return [h / (h + m) if h + m else 0.0
                 for h, m in zip(self.epoch_hit_bytes, self.epoch_miss_bytes)]
 
+    @property
+    def h2d_gbps(self) -> float:
+        """Effective H2D rate over host put time (GB/s), on the PHYSICAL
+        per-device DMA bytes (`bytes_put`) — put time is spent issuing every
+        copy, broadcast or not."""
+        return self.bytes_put / max(self.put_seconds, 1e-12) / 1e9
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """Stall-free fraction of the wall clock: 1 minus the share spent
+        blocked in puts/drains, clamped to [0, 1].  The trace-level
+        `Tracer.overlap_efficiency` is the per-span timeline analogue."""
+        if self.seconds <= 0.0:
+            return 0.0
+        busy = (self.put_seconds + self.drain_seconds) / self.seconds
+        return min(1.0, max(0.0, 1.0 - busy))
+
 
 class _PadStage:
     """One reusable padded staging buffer for ragged tail blocks.
@@ -462,18 +480,24 @@ def prep_block(gb: np.ndarray, tile: int, block_dtype: str,
 
 def iter_shared_blocks(G: np.ndarray, tile: int, block_dtype: str,
                        group: int = GROUP_ROWS,
-                       stage: Optional[_PadStage] = None):
+                       stage: Optional[_PadStage] = None, trace=None):
     """The shared host block reader: yield each (tile, B) row-block of G
     exactly once as ``(sel, cnt, gb_send)`` — the driver fans every yielded
     buffer out to all live engines, so a full pass reads G (and, for the
     int8 wire, quantises it) once regardless of device count.  ``stage`` is
     the caller-owned reusable pad buffer; the driver allocates it once per
-    solve and its per-pass barrier makes cross-pass reuse safe."""
+    solve and its per-pass barrier makes cross-pass reuse safe.  ``trace``
+    records one ``read`` span per staged block (the host-RAM read + pad /
+    encode work the reader dedupes across devices)."""
     n = G.shape[0]
+    tr = resolve_tracer(trace)
     for b in range(math.ceil(n / tile)):
         s, e = b * tile, min((b + 1) * tile, n)
-        yield slice(s, e), e - s, prep_block(G[s:e], tile, block_dtype,
-                                             group, stage)
+        t0 = tr.begin()
+        gb_send = prep_block(G[s:e], tile, block_dtype, group, stage)
+        tr.end("read", "stage_block", t0, bytes=int(gb_send.nbytes),
+               rows=e - s, block=b)
+        yield slice(s, e), e - s, gb_send
 
 
 class _BlockPipeline:
@@ -483,11 +507,12 @@ class _BlockPipeline:
     ``prefetch`` is mutable — the overlap-autotune loop deepens it when the
     first full pass measures transfer lagging compute."""
 
-    def __init__(self, prefetch: int, a_r, u_r, stats):
+    def __init__(self, prefetch: int, a_r, u_r, stats, trace=None):
         self.inflight = collections.deque()
         self.prefetch = max(1, prefetch)
         self.a_r, self.u_r = a_r, u_r
         self.stats = stats
+        self.trace = resolve_tracer(trace)
 
     def push(self, items):
         if not items:
@@ -502,7 +527,8 @@ class _BlockPipeline:
 
     def _drain_one(self):
         items = self.inflight.popleft()
-        t0 = time.perf_counter()
+        t0 = self.trace.begin()
+        nb = 0
         for t, take, m, a_ref, u_ref in items:
             # ``take`` addresses the window in the task-LOCAL arrays: a
             # contiguous slice on full passes, an active-position gather on
@@ -510,7 +536,9 @@ class _BlockPipeline:
             self.a_r[t][take] = np.asarray(a_ref)[:m]
             self.u_r[t][take] = np.asarray(u_ref)[:m]
             self.stats.bytes_d2h += 2 * m * BYTES_F32
-        self.stats.drain_seconds += time.perf_counter() - t0
+            nb += 2 * m * BYTES_F32
+        self.stats.drain_seconds += self.trace.end(
+            "drain", "block_drain", t0, bytes=nb, windows=len(items))
 
 
 def _padded(vec, fill, dtype, tile):
@@ -603,10 +631,11 @@ class _Stage2Engine:
 
         self.stats = Stage2StreamStats(tile_rows=tile,
                                        block_dtype=cfg.block_dtype)
+        self.trace = resolve_tracer(cfg.trace)
         self.w = [_put(np.zeros((rank,), np.float32), device)
                   for _ in range(T)]
         self.pipe = _BlockPipeline(cfg.prefetch, self.a_r, self.u_r,
-                                   self.stats)
+                                   self.stats, trace=self.trace)
         self.done = np.zeros((T,), bool)
         self.violation = np.full((T,), np.inf, np.float32)
         self.epochs_used = np.full((T,), config.max_epochs, np.int32)
@@ -739,13 +768,14 @@ class _Stage2Engine:
         self._drain_mark = self.stats.drain_seconds
 
     def _put_block(self, gb_send, cache_key: Optional[bytes] = None):
-        t0 = time.perf_counter()
+        t0 = self.trace.begin()
         if isinstance(gb_send, QuantBlock):
             # int8 wire: ship values + compact scale table, dequantise fused
             # on device — a quarter of the f32 bytes crossed the bus.
             vals = _put(gb_send.values, self.device)
             scales = _put(gb_send.scales, self.device)
-            self.stats.put_seconds += time.perf_counter() - t0
+            self.stats.put_seconds += self.trace.end(
+                "h2d", "put_block", t0, bytes=int(gb_send.nbytes))
             self.stats.bytes_put += gb_send.nbytes
             if cache_key is not None:
                 # Pin the WIRE arrays (int8 codes + scale table, a quarter
@@ -754,7 +784,8 @@ class _Stage2Engine:
                                   gb_send.nbytes)
             return dequant_rows(vals, scales, gb_send.group)
         gb = _put(gb_send, self.device)
-        self.stats.put_seconds += time.perf_counter() - t0
+        self.stats.put_seconds += self.trace.end(
+            "h2d", "put_block", t0, bytes=int(gb_send.nbytes))
         self.stats.bytes_put += gb_send.nbytes
         if cache_key is not None:
             # Pin the device array exactly as put (bf16 stays bf16 — the
@@ -777,9 +808,10 @@ class _Stage2Engine:
         return _upcast32(payload) if self._bf16 else payload
 
     def _put_vec(self, vec, fill, dtype, length):
-        t0 = time.perf_counter()
+        t0 = self.trace.begin()
         b = _put(_padded(np.asarray(vec), fill, dtype, length), self.device)
-        self.stats.put_seconds += time.perf_counter() - t0
+        self.stats.put_seconds += self.trace.end(
+            "h2d", "put_vec", t0, bytes=int(b.nbytes))
         self.stats.bytes_h2d += b.nbytes
         self.stats.bytes_put += b.nbytes
         return b
@@ -836,10 +868,12 @@ class _Stage2Engine:
         yb = self._put_vec(self.y_r[t][take], 1.0, np.float32, wl)
         cb = self._put_vec(self.c_r[t][take], 0.0, np.float32, wl)
         ub = self._put_vec(self.u_r[t][take], 0, np.int32, wl)
+        t0 = self.trace.begin()
         a2, u2, w2, viol = self.epoch_fn(
             gw, yb, cb, qw, ab, ub, self.w[t],
             full_pass=full, shrink_k=self.shrink_k)
         self.w[t] = w2
+        self.trace.end("kernel", "sweep_window", t0, rows=m, task=t)
         self.stats.kernel_calls += 1
         self.stats.coord_visits += m
         if full:
@@ -888,6 +922,7 @@ class _Stage2Engine:
             return
         # Re-compact: cheap epochs stream only rows active for at least one
         # unconverged task — shrinking cuts H2D bytes, not just FLOPs.
+        t0 = self.trace.begin()
         self.act, self.act_G, self.act_q = None, None, None
         self._cw = {}
         self._act_keys = self._act_sizes = None
@@ -952,11 +987,21 @@ class _Stage2Engine:
                             [self.u_r[t][act_take[t]] for t in live2],
                             [self.ids[t][act_take[t]] for t in live2]))
                     self.stats.cache_evictions = self.cache.evictions
+                    self.trace.instant(
+                        "cache", "plan", blocks=n_blocks,
+                        evictions=self.cache.evictions,
+                        resident_bytes=self.cache.resident_bytes)
         if self.cache is not None and self._act_keys is None:
             # No compaction to serve (union == n, all tasks converged, or
             # shrinking off): nothing the cache could hit — drop the pins.
             self.cache.invalidate()
             self.stats.cache_evictions = self.cache.evictions
+            self.trace.instant("cache", "invalidate",
+                               evictions=self.cache.evictions)
+        self.trace.end(
+            "compact", "recompact", t0,
+            union=int(len(self.act)) if self.act is not None else self.n,
+            tasks=len(live2))
 
     # ----------------------------------------------------- compacted epochs
     def _encode_compacted(self, union: np.ndarray,
@@ -1008,6 +1053,8 @@ class _Stage2Engine:
                 # this down).
                 self.stats.bytes_hit += ent.nbytes
                 self.stats.cache_hits += 1
+                self.trace.instant("cache", "hit", bytes=int(ent.nbytes),
+                                   block=b)
                 gb = self._decode_cached(ent.payload)
             else:
                 gb_send = (self.act_q[b] if self.act_q is not None
@@ -1023,6 +1070,8 @@ class _Stage2Engine:
                 self.stats.rows_streamed += e - s
                 if self.cache is not None:
                     self.stats.cache_misses += 1
+                    self.trace.instant("cache", "miss",
+                                       bytes=int(gb_send.nbytes), block=b)
                 gb = self._put_block(gb_send, cache_key=key)
             qb = _row_sq(gb)
             items = []
@@ -1047,12 +1096,15 @@ class _Stage2Engine:
     def result(self):
         """Assemble this shard's `SolveResult` (host numpy, same layout as
         `solve_batch`) and its per-device stats record."""
+        t0 = self.trace.begin()
         W = (np.stack([np.asarray(wt) for wt in self.w]) if self.T
              else np.zeros((0, self.rank), np.float32))
         self.stats.bytes_d2h += W.nbytes
         alpha = np.zeros_like(self.a0_loc)
         for t in range(self.T):
             alpha[t][self.scat[t]] = self.a_r[t]
+        self.trace.end("scatter", "result", t0,
+                       bytes=int(W.nbytes + alpha.nbytes), tasks=self.T)
         asum = (np.array([self.a_r[t].sum() for t in range(self.T)],
                          np.float32) if self.T
                 else np.zeros((0,), np.float32))
@@ -1094,6 +1146,7 @@ def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
     counters); per-engine records accumulate task-vector traffic.
     """
     fan = fanout or _InlineFanout()
+    tr = resolve_tracer(cfg.trace)
     reader = Stage2StreamStats(tile_rows=tile, block_dtype=cfg.block_dtype)
     # One reusable pad buffer for every shared pass of this solve: the
     # barrier below guarantees the previous pass's tail has been consumed.
@@ -1104,7 +1157,8 @@ def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
         for e in group:
             e.begin_pass(kind)
         for sel, cnt, gb in iter_shared_blocks(G, tile, cfg.block_dtype,
-                                               wire_group(tile, cfg), stage):
+                                               wire_group(tile, cfg), stage,
+                                               trace=tr):
             reader.bytes_h2d += gb.nbytes
             reader.bytes_g += gb.nbytes
             if isinstance(gb, QuantBlock):
@@ -1131,6 +1185,9 @@ def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
                 break
             for e in live:
                 e.start_epoch(epoch)
+            if tr.enabled:
+                te0 = tr.begin()
+                cv0 = sum(e.stats.coord_visits for e in live)
             full = ((epoch % period == 0) or not config.shrink
                     or any(e.wants_full for e in live))
             # ^ freshly seeded C-ladder successors need a full-coverage pass
@@ -1157,9 +1214,40 @@ def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
                     reader.epoch_bytes.append(0)
             for e in live:
                 e.finish_epoch(epoch)
+            if tr.enabled:
+                _trace_epoch(tr, te0, epoch, "full" if full else "cheap",
+                             live, reader, cv0)
     finally:
         fan.close()
     return reader
+
+
+def _trace_epoch(tr, t0: float, epoch: int, kind: str,
+                 live: Sequence[_Stage2Engine], reader: Stage2StreamStats,
+                 cv0: int) -> None:
+    """Close the driver's per-epoch span: attrs aggregate the epoch's
+    traffic/convergence counters across live engines — the `--verbose`
+    progress listener and the trace-file epoch row both read from it."""
+    eb = reader.epoch_bytes[-1] if reader.epoch_bytes else 0
+    hit = miss = 0
+    for e in live:
+        eb += e.stats.epoch_bytes[-1] if e.stats.epoch_bytes else 0
+        hit += e.stats.epoch_hit_bytes[-1] if e.stats.epoch_hit_bytes else 0
+        miss += (e.stats.epoch_miss_bytes[-1]
+                 if e.stats.epoch_miss_bytes else 0)
+    rows = sum(e.stats.coord_visits for e in live) - cv0
+    act = sum((len(e.act) if e.act is not None else e.n) for e in live)
+    viols = np.concatenate([e.violation for e in live])
+    viols = viols[np.isfinite(viols)]
+    attrs = dict(epoch=epoch, kind=kind, bytes=int(eb), hit_bytes=int(hit),
+                 miss_bytes=int(miss), rows=int(rows), active=int(act),
+                 devices=len(live))
+    if viols.size:
+        attrs["viol"] = float(viols.max())
+    tr.end("epoch", f"epoch_{epoch}", t0, **attrs)
+    tr.counter("stage2/epoch_bytes", eb)
+    tr.counter("stage2/active_rows", act)
+    tr.counter("stage2/row_visits", rows)
 
 
 def _elementwise_sum(lists: Sequence[Sequence[int]]) -> List[int]:

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.kernel_fn import KernelParams, gram
 from repro.core.quant import GROUP_ROWS, quantize_rows
+from repro.core.trace import resolve as resolve_tracer
 
 BYTES_F32 = 4
 
@@ -81,6 +82,10 @@ class StreamConfig:
     cache_budget_bytes: Optional[int] = None  # HBM cache allowance per
                                          # engine; None -> the unused
                                          # remainder of device_budget_bytes
+    trace: Optional[object] = None       # core.trace.Tracer recording the
+                                         # pipeline timeline; None -> the
+                                         # process-wide tracer if installed,
+                                         # else the no-op fast path
 
     def __post_init__(self):
         if self.prefetch < 1:
@@ -134,6 +139,21 @@ class Stage1StreamStats:
     seconds: float = 0.0
     wire_dtype: str = "f32"
     prefetch_final: int = 0           # queue depth after autotune
+
+    @property
+    def h2d_gbps(self) -> float:
+        """Effective H2D rate over host put time (GB/s)."""
+        return self.bytes_h2d / max(self.put_seconds, 1e-12) / 1e9
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """Stall-free fraction of the wall clock: 1 minus the share spent
+        blocked in puts/drains, clamped to [0, 1].  The trace-level
+        `Tracer.overlap_efficiency` is the per-span timeline analogue."""
+        if self.seconds <= 0.0:
+            return 0.0
+        busy = (self.put_seconds + self.drain_seconds) / self.seconds
+        return min(1.0, max(0.0, 1.0 - busy))
 
 
 def resident_bytes(p: int, budget: int) -> int:
@@ -214,6 +234,7 @@ def stream_factor_blocks(
     autotune_prefetch: bool = False,
     prefetch_cap: int = 8,
     stats: Optional[Stage1StreamStats] = None,
+    trace=None,
 ) -> np.ndarray:
     """Fill a host-resident G from an *iterator* of dense row blocks.
 
@@ -255,6 +276,7 @@ def stream_factor_blocks(
         gram_q8_fn = default_gram_q8_fn()
     st = stats if stats is not None else Stage1StreamStats()
     st.wire_dtype = wire_dtype
+    tr = resolve_tracer(trace)
     t_start = time.perf_counter()
 
     # One resident replica of the landmark block per device.
@@ -271,14 +293,16 @@ def stream_factor_blocks(
 
     def drain_one():
         s, e, gb = inflight.popleft()
-        t0 = time.perf_counter()
+        t0 = tr.begin()
         out[s:e] = np.asarray(gb)   # blocks on this chunk only
-        st.drain_seconds += time.perf_counter() - t0
+        st.drain_seconds += tr.end("drain", "stage1_fetch", t0,
+                                   bytes=int(gb.nbytes), rows=e - s)
 
     def put(a, d):
-        t0 = time.perf_counter()
+        t0 = tr.begin()
         b = jnp.asarray(a) if d is None else jax.device_put(a, d)
-        st.put_seconds += time.perf_counter() - t0
+        st.put_seconds += tr.end("h2d", "stage1_put", t0,
+                                 bytes=int(a.nbytes))
         st.bytes_h2d += a.nbytes
         return b
 
@@ -293,12 +317,21 @@ def stream_factor_blocks(
         d = devices[i % len(devices)]
         lm, pr = resident[i % len(devices)]
         if quant:
+            t0 = tr.begin()
             vals, scales = quantize_rows(xb, quant_group_rows, symmetric=True)
+            tr.end("encode", "stage1_quant", t0, rows=xb.shape[0],
+                   bytes=int(vals.nbytes + scales.nbytes))
             st.bytes_scales += scales.nbytes
-            gb = _chunk_features_q8(put(vals, d), put(scales, d), lm, pr,
+            bv, bs = put(vals, d), put(scales, d)
+            t0 = tr.begin()
+            gb = _chunk_features_q8(bv, bs, lm, pr,
                                     params, quant_group_rows, gram_q8_fn)
+            tr.end("kernel", "stage1_chunk", t0, rows=e - s)
         else:
-            gb = _chunk_features(put(xb, d), lm, pr, params, gram_fn)
+            bx = put(xb, d)
+            t0 = tr.begin()
+            gb = _chunk_features(bx, lm, pr, params, gram_fn)
+            tr.end("kernel", "stage1_chunk", t0, rows=e - s)
         st.chunks += 1
         st.rows += e - s
         inflight.append((s, e, gb))
@@ -447,7 +480,7 @@ def _streamed_factor_from_landmarks(
         wire_dtype=config.stage1_dtype,
         quant_group_rows=config.quant_group_rows,
         autotune_prefetch=config.autotune_prefetch,
-        prefetch_cap=config.prefetch_cap, stats=stats)
+        prefetch_cap=config.prefetch_cap, stats=stats, trace=config.trace)
 
     return nystrom.LowRankFactor(
         G=G, landmarks=landmarks, projector=projector, eigvals=evals,

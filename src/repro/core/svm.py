@@ -11,7 +11,6 @@ exactly the reuse pattern the paper measures in Table 3.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import jax
@@ -27,6 +26,7 @@ from repro.core.polish import (PolishSchedule, PolishTrace, make_schedule,
 from repro.core.solver_stream import (Stage2StreamStats, route_stage2,
                                       solve_streamed_auto)
 from repro.core.streaming import StreamConfig
+from repro.core.trace import resolve as resolve_tracer
 
 
 @dataclasses.dataclass
@@ -100,10 +100,13 @@ class LPDSVM:
         self.stats = FitStats()
 
     # ------------------------------------------------------------------ stage 1
-    def prepare(self, x: np.ndarray) -> LowRankFactor:
+    def prepare(self, x: np.ndarray, trace=None) -> LowRankFactor:
         """Compute (or return the cached) low-rank factor G for `x`."""
         if self.factor is None:
-            t0 = time.perf_counter()
+            tr = resolve_tracer(
+                trace if trace is not None
+                else getattr(self.stream_config, "trace", None))
+            t0 = tr.begin()
             if self.stream or self.stream_config is not None:
                 # Host numpy in, so the streamed path never materialises the
                 # full x on device; the monolithic path converts internally.
@@ -113,7 +116,9 @@ class LPDSVM:
                 key=jax.random.PRNGKey(self.seed), gram_fn=self.gram_fn,
                 stream=self.stream, stream_config=self.stream_config)
             wait_for_factor(self.factor.G)
-            self.stats.stage1_seconds = time.perf_counter() - t0
+            self.stats.stage1_seconds = tr.end(
+                "fit", "stage1", t0, rows=int(np.asarray(x).shape[0]),
+                budget=self.budget)
             self.stats.effective_rank = self.factor.effective_rank
             self.stats.stage1_streamed = self.factor.streamed
             self.stats.stage1_stats = getattr(self.factor, "stage1_stats",
@@ -123,7 +128,20 @@ class LPDSVM:
     # ------------------------------------------------------------------ stage 2
     def fit(self, x: np.ndarray, y: np.ndarray,
             factor: Optional[LowRankFactor] = None,
-            warm_alpha: Optional[np.ndarray] = None) -> "LPDSVM":
+            warm_alpha: Optional[np.ndarray] = None,
+            trace=None) -> "LPDSVM":
+        """Two-stage fit.  ``trace`` optionally records the run's pipeline
+        timeline (a `core.trace.Tracer`): it is threaded into the streamed
+        paths via `StreamConfig.trace`, wins over an installed process-wide
+        tracer, and with ``trace=None`` the no-op fast path keeps outputs
+        bit-identical to an un-instrumented fit."""
+        if trace is not None and self.stream_config is not None \
+                and self.stream_config.trace is None:
+            self.stream_config = dataclasses.replace(self.stream_config,
+                                                     trace=trace)
+        tr = resolve_tracer(
+            trace if trace is not None
+            else getattr(self.stream_config, "trace", None))
         y = np.asarray(y)
         self.classes_, labels = np.unique(y, return_inverse=True)
         n_classes = len(self.classes_)
@@ -134,17 +152,18 @@ class LPDSVM:
             self.stats.effective_rank = factor.effective_rank
             self.stats.stage1_streamed = factor.streamed
             self.stats.stage1_stats = getattr(factor, "stage1_stats", None)
-        self.prepare(x)
+        self.prepare(x, trace=trace)
 
         warm = None
         if warm_alpha is not None:
             warm = [np.asarray(a) for a in warm_alpha]
         tasks, self.pairs_ = build_ovo_tasks(labels, n_classes, self.C, alpha0=warm)
         self.tasks_ = tasks
-        t0 = time.perf_counter()
-        res: SolveResult = self._solve_stage2(tasks)
+        t0 = tr.begin()
+        res: SolveResult = self._solve_stage2(tasks, trace=trace)
         wait_for_factor(res.w)
-        self.stats.stage2_seconds = time.perf_counter() - t0
+        self.stats.stage2_seconds = tr.end("fit", "stage2", t0,
+                                           tasks=tasks.n_tasks)
         self.stats.n_tasks = tasks.n_tasks
         self.stats.epochs = np.asarray(res.epochs)
         self.stats.violations = np.asarray(res.violation)
@@ -152,33 +171,38 @@ class LPDSVM:
         self.alpha_ = res.alpha
         return self
 
-    def _solve_stage2(self, tasks: TaskBatch) -> SolveResult:
+    def _solve_stage2(self, tasks: TaskBatch, trace=None) -> SolveResult:
         """Stage-2 dispatch (see `solver_stream.route_stage2`): the polish
         ladder when enabled, the streamed row-block solver when G must stay
         host-resident (overlapped over every local device when there are
         several — `solve_streamed_auto`), else the jit'd `solve_batch`."""
         G = self.factor.G
+        # Routing always uses self.stream_config (a trace must never change
+        # which solver runs); a fit(trace=...) with no explicit StreamConfig
+        # still reaches the streamed paths via a default config carrying it.
+        cfg = self.stream_config
+        if trace is not None and cfg is None:
+            cfg = StreamConfig(trace=trace)
         self.stats.stage2_streamed = False      # refits must not report the
         self.stats.stage2_stats = None          # previous fit's stream stats
         self.stats.polished = False
         self.stats.polish_trace = None
         if self.polish_schedule is not None:
-            res, trace = solve_polished(
+            res, ptrace = solve_polished(
                 self.factor, tasks, self.config, self.polish_schedule,
                 stream=self.stream, stream_config=self.stream_config,
                 solve_fn=self.solve_fn, gap_trace=self.polish_gap_trace,
-                return_trace=True)
+                return_trace=True, trace=trace)
             self.stats.polished = True
-            self.stats.polish_trace = trace
-            self.stats.stage2_streamed = trace.final.streamed
-            self.stats.stage2_stats = trace.final.stream_stats
+            self.stats.polish_trace = ptrace
+            self.stats.stage2_streamed = ptrace.final.streamed
+            self.stats.stage2_stats = ptrace.final.stream_stats
             return res
         if not route_stage2(self.factor, tasks, self.stream,
                             self.stream_config, self.solve_fn, solve_batch):
             return self.solve_fn(G, tasks, self.config)
         res, stats = solve_streamed_auto(
-            G, tasks, self.config, stream_config=self.stream_config,
-            return_stats=True)
+            G, tasks, self.config, stream_config=cfg, return_stats=True)
         self.stats.stage2_streamed = True
         self.stats.stage2_stats = stats
         return res

@@ -10,6 +10,7 @@ and LPD-SVM trains the one-vs-one large-margin classifier on top.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -250,6 +251,18 @@ def main():
                          "features (end-to-end out-of-core path)")
     ap.add_argument("--n-features", type=int, default=0,
                     help="feature count for --libsvm (0 = infer from file)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record the run's pipeline timeline (core/trace.py) "
+                         "and export it as Chrome-trace JSON loadable in "
+                         "Perfetto / chrome://tracing")
+    ap.add_argument("--trace-summary", action="store_true",
+                    help="print the aggregated trace summary (seconds per "
+                         "category, effective H2D GB/s, rows/s, overlap "
+                         "efficiency) after the run; implies tracing")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print one progress line per stage-2 epoch (active "
+                         "rows, bytes, cache hit rate, rows/s, max KKT "
+                         "violation); implies tracing")
     args = ap.parse_args()
     if args.chunk_rows < 0:
         ap.error(f"--chunk-rows must be >= 0, got {args.chunk_rows}")
@@ -288,6 +301,34 @@ def main():
             cache_budget_bytes=(int(args.cache_budget_mb * 2**20)
                                 if args.cache_budget_mb > 0 else None))
 
+    # Observability (core/trace.py): any of the three flags arms a tracer.
+    # It is installed process-wide — every instrumented hot path resolves it
+    # even when no StreamConfig exists — and additionally threaded through
+    # `StreamConfig.trace` when one does.  Export/summary run in `finally`
+    # so a failed run still leaves a timeline to look at.
+    tracer = None
+    if args.trace or args.trace_summary or args.verbose:
+        from repro.core.trace import ProgressPrinter, Tracer, install
+        tracer = Tracer()
+        if args.verbose:
+            tracer.add_listener(ProgressPrinter())
+        if stream_config is not None:
+            stream_config = dataclasses.replace(stream_config, trace=tracer)
+        install(tracer)
+    try:
+        return _run(args, ap, stream_config, force)
+    finally:
+        if tracer is not None:
+            from repro.core.trace import uninstall
+            uninstall()
+            if args.trace:
+                tracer.export(args.trace)
+                print(f"trace: {tracer.n_events} events -> {args.trace}")
+            if args.trace_summary:
+                print(tracer.summary())
+
+
+def _run(args, ap, stream_config, force):
     if args.libsvm:
         if args.grid_cs is not None:
             ap.error("--grid-cs is not supported with --libsvm")

@@ -1,0 +1,374 @@
+"""Observability substrate (core/trace.py).
+
+Pins down (a) the Chrome-trace export schema (Perfetto-loadable JSON with
+thread-name metadata, complete spans, instants, counters); (b) thread safety
+under the real 2-device farm — spans arrive from the shared reader thread
+AND every device worker thread; (c) the disabled-mode contract: a live but
+UNINSTALLED tracer records zero events, and a traced solve is bit-identical
+to an untraced one (tracing observes, never steers); (d) the derived-rate
+properties (`h2d_gbps`, `overlap_efficiency`) shared by the stats
+dataclasses and the benchmarks; (e) the timeline overlap-efficiency
+computation on synthetic spans with known geometry.
+"""
+import io
+import json
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (KernelParams, SolverConfig, StreamConfig,
+                        compute_factor, solve_batch_streamed)
+from repro.core.ovo import build_ovo_tasks
+from repro.core.solver_stream import Stage2StreamStats
+from repro.core.streaming import Stage1StreamStats
+from repro.core.svm import LPDSVM
+from repro.core import trace as T
+from repro.core.trace import (NULL, NullTracer, ProgressPrinter, Tracer,
+                              install, resolve, uninstall)
+from repro.data import make_multiclass
+
+from tests.test_stage2_mesh import run_sub
+
+
+def _problem(n=240, classes=3, budget=48, C=2.0, seed=3):
+    x, y = make_multiclass(n, p=5, n_classes=classes, seed=seed)
+    _, labels = np.unique(y, return_inverse=True)
+    fac = compute_factor(jnp.asarray(x, jnp.float32),
+                         KernelParams("rbf", gamma=0.25), budget)
+    tasks, _ = build_ovo_tasks(labels, classes, C)
+    return np.asarray(fac.G), tasks
+
+
+# ------------------------------------------------------------- recording
+
+def test_record_span_instant_counter():
+    tr = Tracer()
+    t0 = tr.begin()
+    dt = tr.end("h2d", "put", t0, bytes=1024)
+    assert dt >= 0.0
+    with tr.span("kernel", "sweep", rows=8) as sp:
+        sp.set(extra=1)
+    tr.instant("cache", "hit", bytes=64)
+    tr.counter("queue_depth/dev0", 3)
+    cats = tr.categories()
+    assert cats == {"h2d": 1, "kernel": 1, "cache": 1, "counter": 1}
+    evs = tr.events()
+    ph = sorted(e[0] for e in evs)
+    assert ph == ["C", "X", "X", "i"]
+    kern = [e for e in evs if e[1] == "kernel"][0]
+    assert kern[6] == {"rows": 8, "extra": 1}
+
+
+def test_end_duration_feeds_stats_semantics():
+    """`end` returns the same elapsed-seconds quantity a perf_counter pair
+    would, so `put_seconds += tr.end(...)` preserves stats meanings."""
+    tr = Tracer()
+    t0 = tr.begin()
+    dt = tr.end("h2d", "put", t0)
+    ev = tr.events()[0]
+    assert ev[4] == pytest.approx(dt)
+    assert ev[3] == pytest.approx(t0)
+
+
+def test_listener_sees_raw_tuples():
+    tr = Tracer()
+    seen = []
+    tr.add_listener(seen.append)
+    tr.instant("cache", "miss", bytes=7)
+    assert len(seen) == 1
+    assert seen[0][0] == "i" and seen[0][1] == "cache"
+
+
+# ---------------------------------------------------------- export schema
+
+def test_export_chrome_trace_schema(tmp_path):
+    tr = Tracer()
+    t0 = tr.begin()
+    tr.end("h2d", "put", t0, bytes=int(np.int64(4096)))
+    tr.instant("cache", "hit", bytes=np.int32(64))
+    tr.counter("depth", np.float32(2.0))
+    path = tmp_path / "t.json"
+    tr.export(str(path))
+    d = json.load(open(path))
+    assert set(d) >= {"traceEvents"}
+    evs = d["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert meta and meta[0]["name"] == "thread_name"
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert spans
+    for e in spans:
+        assert {"name", "cat", "ts", "dur", "pid", "tid"} <= set(e)
+        assert e["ts"] >= 0.0
+    inst = [e for e in evs if e["ph"] == "i"]
+    assert inst and inst[0]["s"] == "t"
+    # numpy attrs must have degraded to plain JSON numbers
+    assert spans[0]["args"]["bytes"] == 4096
+    ctr = [e for e in evs if e["ph"] == "C"][0]
+    assert ctr["args"]["value"] == 2.0
+
+
+def test_export_thread_rows(tmp_path):
+    tr = Tracer()
+    tr.instant("cache", "main")
+
+    def worker():
+        tr.instant("cache", "side")
+
+    th = threading.Thread(target=worker, name="worker/devX")
+    th.start()
+    th.join()
+    path = tmp_path / "t.json"
+    tr.export(str(path))
+    d = json.load(open(path))
+    names = {e["args"]["name"] for e in d["traceEvents"] if e["ph"] == "M"}
+    assert "worker/devX" in names
+    tids = {e["tid"] for e in d["traceEvents"] if e["ph"] == "i"}
+    assert len(tids) == 2
+
+
+# ------------------------------------------------------------- aggregation
+
+def _synthetic_span(tr, cat, name, t_abs, dur, tid_thread=None, **attrs):
+    """Record a span with controlled geometry (optionally from a named
+    thread so overlap sees distinct tids)."""
+    if tid_thread is None:
+        tr._record("X", cat, name, t_abs, dur, attrs)
+        return
+    th = threading.Thread(
+        target=lambda: tr._record("X", cat, name, t_abs, dur, attrs),
+        name=tid_thread)
+    th.start()
+    th.join()
+
+
+def test_overlap_efficiency_geometry():
+    """h2d [0,2) vs other-thread kernel [1,3): exactly half hidden."""
+    tr = Tracer()
+    _synthetic_span(tr, "h2d", "put", 0.0, 2.0)
+    _synthetic_span(tr, "kernel", "sweep", 1.0, 2.0, tid_thread="w0")
+    assert tr.overlap_efficiency() == pytest.approx(0.5)
+
+
+def test_overlap_efficiency_same_thread_not_hidden():
+    """Compute on the SAME thread cannot hide that thread's transfers."""
+    tr = Tracer()
+    _synthetic_span(tr, "h2d", "put", 0.0, 2.0)
+    _synthetic_span(tr, "kernel", "sweep", 0.0, 2.0)
+    assert tr.overlap_efficiency() == pytest.approx(0.0)
+
+
+def test_overlap_efficiency_none_without_transfers():
+    tr = Tracer()
+    _synthetic_span(tr, "kernel", "sweep", 0.0, 1.0)
+    assert tr.overlap_efficiency() is None
+
+
+def test_merge_and_overlap_helpers():
+    merged = T._merge_intervals([(3.0, 4.0), (0.0, 1.0), (0.5, 2.0)])
+    assert merged == [(0.0, 2.0), (3.0, 4.0)]
+    assert T._overlap_with(0.5, 3.5, merged) == pytest.approx(2.0)
+
+
+def test_summary_reports_figures():
+    tr = Tracer()
+    _synthetic_span(tr, "h2d", "put", 0.0, 1.0, bytes=10**9)
+    _synthetic_span(tr, "kernel", "sweep", 0.5, 1.5, tid_thread="w0",
+                    rows=1000)
+    s = tr.summary()
+    assert "effective H2D" in s
+    assert "rows/s" in s
+    assert "overlap efficiency" in s
+
+
+def test_progress_printer_line():
+    buf = io.StringIO()
+    pp = ProgressPrinter(stream=buf)
+    tr = Tracer()
+    tr.add_listener(pp)
+    t0 = tr.begin()
+    tr.end("epoch", "epoch_3", t0, epoch=3, kind="cheap", bytes=10**6,
+           hit_bytes=3, miss_bytes=1, rows=100, active=42, viol=0.25)
+    line = buf.getvalue()
+    assert "epoch    3" in line and "[cheap]" in line
+    assert "active=      42" in line and "hit=75.0%" in line
+    # non-epoch events must not print
+    tr.instant("cache", "hit")
+    assert buf.getvalue() == line
+
+
+# ------------------------------------------------------ disabled-mode no-op
+
+def test_null_tracer_records_nothing_and_still_times():
+    t0 = NULL.begin()
+    dt = NULL.end("h2d", "put", t0, bytes=1)
+    assert isinstance(dt, float) and dt >= 0.0
+    with NULL.span("kernel", "sweep") as sp:
+        sp.set(rows=1)
+    NULL.instant("cache", "hit")
+    NULL.counter("q", 1)
+    assert not NULL.enabled
+
+
+def test_resolve_precedence():
+    assert resolve(None) is NULL
+    tr = Tracer()
+    install(tr)
+    try:
+        assert resolve(None) is tr
+        other = Tracer()
+        assert resolve(other) is other
+    finally:
+        uninstall()
+    assert resolve(None) is NULL
+
+
+def test_uninstalled_spy_records_zero_events():
+    """A live tracer that is neither installed nor passed must see NOTHING
+    from a full streamed solve — proof the default path is the no-op."""
+    spy = Tracer()
+    G, tasks = _problem()
+    cfg = StreamConfig(tile_rows=64)
+    solve_batch_streamed(jnp.asarray(G), tasks, SolverConfig(tol=1e-2),
+                         stream_config=cfg)
+    assert spy.n_events == 0
+
+
+def test_traced_solve_bit_identical_to_untraced():
+    """Tracing observes the pipeline; it must not steer it."""
+    G, tasks = _problem()
+    cfg0 = StreamConfig(tile_rows=64)
+    res0, st0 = solve_batch_streamed(jnp.asarray(G), tasks,
+                                     SolverConfig(tol=1e-2),
+                                     stream_config=cfg0, return_stats=True)
+    tr = Tracer()
+    cfg1 = StreamConfig(tile_rows=64, trace=tr)
+    res1, st1 = solve_batch_streamed(jnp.asarray(G), tasks,
+                                     SolverConfig(tol=1e-2),
+                                     stream_config=cfg1, return_stats=True)
+    assert tr.n_events > 0
+    assert np.array_equal(np.asarray(res0.alpha), np.asarray(res1.alpha))
+    assert np.array_equal(np.asarray(res0.w), np.asarray(res1.w))
+    assert np.array_equal(np.asarray(res0.epochs), np.asarray(res1.epochs))
+    assert st0.bytes_h2d == st1.bytes_h2d
+    assert st0.epoch_bytes == st1.epoch_bytes
+
+
+# ----------------------------------------------------- derived-rate dedup
+
+def test_stage1_stats_properties():
+    st = Stage1StreamStats(bytes_h2d=2 * 10**9, put_seconds=1.0,
+                           drain_seconds=1.0, seconds=4.0)
+    assert st.h2d_gbps == pytest.approx(2.0)
+    assert st.overlap_efficiency == pytest.approx(0.5)
+    assert Stage1StreamStats().overlap_efficiency == 0.0
+
+
+def test_stage2_stats_properties():
+    st = Stage2StreamStats(bytes_put=3 * 10**9, put_seconds=2.0,
+                           drain_seconds=1.0, seconds=10.0)
+    assert st.h2d_gbps == pytest.approx(1.5)
+    assert st.overlap_efficiency == pytest.approx(0.7)
+    # fully busy clamps at 0, never negative
+    st2 = Stage2StreamStats(put_seconds=9.0, drain_seconds=9.0, seconds=1.0)
+    assert st2.overlap_efficiency == 0.0
+
+
+# ------------------------------------------------------- pipeline coverage
+
+def test_streamed_solve_emits_pipeline_spans():
+    G, tasks = _problem()
+    tr = Tracer()
+    cfg = StreamConfig(tile_rows=64, trace=tr)
+    _, st = solve_batch_streamed(jnp.asarray(G), tasks, SolverConfig(tol=1e-2),
+                                 stream_config=cfg, return_stats=True)
+    cats = tr.categories()
+    for want in ("h2d", "kernel", "epoch"):
+        assert cats.get(want, 0) > 0, cats
+    # span durations ARE the stats: the h2d spans sum to put_seconds
+    h2d = sum(e[4] for e in tr.events()
+              if e[0] == "X" and e[1] == "h2d")
+    assert h2d == pytest.approx(st.put_seconds, rel=1e-6)
+
+
+def test_fit_trace_kwarg_records_both_stages():
+    x, y = make_multiclass(200, p=5, n_classes=3, seed=1)
+    tr = Tracer()
+    svm = LPDSVM(KernelParams("rbf", gamma=0.25), C=2.0, budget=48,
+                 stream=True, stream_config=StreamConfig(tile_rows=64,
+                                                         chunk_rows=64))
+    svm.fit(x, y, trace=tr)
+    cats = tr.categories()
+    assert cats.get("fit", 0) == 2          # stage1 + stage2 spans
+    assert cats.get("read", 0) > 0          # stage-1 chunk staging
+    assert cats.get("h2d", 0) > 0
+    names = {e[2] for e in tr.events() if e[1] == "fit"}
+    assert names == {"stage1", "stage2"}
+
+
+def test_fit_trace_without_stream_config_covers_polish():
+    """An explicit fit(trace=) with NO StreamConfig must still record both
+    stage spans and the polish ladder levels (tracer threading must not
+    depend on a stream config existing)."""
+    x, y = make_multiclass(200, p=5, n_classes=3, seed=2)
+    tr = Tracer()
+    svm = LPDSVM(KernelParams("rbf", gamma=0.25), C=2.0, budget=48,
+                 polish=True, polish_levels=2)
+    svm.fit(x, y, trace=tr)
+    fit_names = {e[2] for e in tr.events() if e[1] == "fit"}
+    assert fit_names == {"stage1", "stage2"}
+    levels = [e[2] for e in tr.events() if e[1] == "polish"]
+    assert levels == [f"level_{i}" for i in range(len(levels))] and levels
+
+
+# ------------------------------------------------- 2-device farm (subprocess)
+
+FARM_CODE = r"""
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from repro.core import (KernelParams, SolverConfig, StreamConfig,
+                        compute_factor, solve_tasks_streamed)
+from repro.core.ovo import build_ovo_tasks
+from repro.core.trace import Tracer
+from repro.data import make_multiclass
+
+x, y = make_multiclass(300, p=5, n_classes=4, seed=7)
+_, labels = np.unique(y, return_inverse=True)
+fac = compute_factor(jnp.asarray(x, jnp.float32),
+                     KernelParams("rbf", gamma=0.25), 48)
+tasks, _ = build_ovo_tasks(labels, 4, 2.0)
+tr = Tracer()
+cfg = StreamConfig(tile_rows=64, trace=tr)
+solve_tasks_streamed(np.asarray(fac.G), tasks, SolverConfig(tol=1e-2),
+                     devices=jax.local_devices(), stream_config=cfg,
+                     overlap=True)
+tr.export("/tmp/_trace_farm_test.json")
+d = json.load(open("/tmp/_trace_farm_test.json"))
+evs = d["traceEvents"]
+names = sorted({e["args"]["name"] for e in evs if e["ph"] == "M"})
+span_tids = sorted({e["tid"] for e in evs if e["ph"] == "X"})
+cats = sorted({e["cat"] for e in evs if e["ph"] == "X"})
+print("NAMES:" + json.dumps(names))
+print("TIDS:%d" % len(span_tids))
+print("CATS:" + json.dumps(cats))
+print("SUMMARY_OK:%d" % ("overlap" in tr.summary()))
+"""
+
+
+def test_farm_trace_covers_all_threads():
+    """Under the real 2-device farm the trace must carry spans from the
+    shared reader (main thread) AND every device worker thread, with the
+    queue/backpressure category present — the lock survives concurrency."""
+    out = run_sub(FARM_CODE, n_dev=2)
+    lines = dict(ln.split(":", 1) for ln in out.strip().splitlines()
+                 if ":" in ln)
+    names = json.loads(lines["NAMES"])
+    assert "worker/dev0" in names and "worker/dev1" in names
+    assert int(lines["TIDS"]) >= 3
+    cats = json.loads(lines["CATS"])
+    for want in ("read", "h2d", "kernel", "queue", "epoch"):
+        assert want in cats, cats
+    assert lines["SUMMARY_OK"] == "1"
