@@ -27,7 +27,8 @@ test:
 # counts; the env var here additionally multi-devices the in-process parts.
 test-mesh:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-	$(PY) -m pytest -x -q tests/test_stage2_mesh.py tests/test_block_cache.py
+	$(PY) -m pytest -x -q tests/test_stage2_mesh.py tests/test_block_cache.py \
+	tests/test_resilience.py
 
 bench:
 	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish table3

@@ -26,6 +26,14 @@ from repro.core.distributed import (balance_chain_split, balance_task_split,
                                     solve_tasks_streamed,
                                     solve_tasks_streamed_mesh,
                                     stream_factor_over_mesh)
+from repro.core.faults import (DeviceLostError, FaultError, FaultPlan,
+                               FaultSpec, InjectedIOError, SimulatedKill,
+                               TransientH2DError, classify_error)
+from repro.core.resilience import (Stage1Progress, StreamGuard,
+                                   WatchdogTimeout, WorkerStuckError,
+                                   g_fingerprint, load_snapshot,
+                                   restore_engines, snapshot_engines,
+                                   validate_snapshot)
 from repro.core.streaming import (Stage1StreamStats, StreamConfig,
                                   auto_chunk_rows, compute_factor_streamed,
                                   compute_factor_streamed_csr,
@@ -55,6 +63,11 @@ __all__ = [
     "balance_chain_split", "balance_task_split",
     "solve_tasks_sharded", "solve_tasks_streamed",
     "solve_tasks_streamed_mesh", "stream_factor_over_mesh",
+    "DeviceLostError", "FaultError", "FaultPlan", "FaultSpec",
+    "InjectedIOError", "SimulatedKill", "TransientH2DError", "classify_error",
+    "Stage1Progress", "StreamGuard", "WatchdogTimeout", "WorkerStuckError",
+    "g_fingerprint", "load_snapshot", "restore_engines", "snapshot_engines",
+    "validate_snapshot",
     "Stage1StreamStats", "StreamConfig", "auto_chunk_rows",
     "compute_factor_streamed", "compute_factor_streamed_csr",
     "default_gram_q8_fn", "should_stream", "stream_factor_blocks",

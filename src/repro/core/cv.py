@@ -15,6 +15,7 @@ SVMs ... far more parallelism than we need".
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -263,10 +264,19 @@ def grid_search(
     warm_first_c = None       # cross-gamma seed (beyond-paper)
     for gi, gamma in enumerate(gammas):
         kp = KernelParams(kind=kernel_kind, gamma=float(gamma))
+        # Each gamma is its own resumable unit: G and the solver state both
+        # depend on gamma, so checkpoints live in per-gamma subdirs (the
+        # snapshot's G fingerprint rejects any cross-gamma mixup anyway).
+        g_cfg = stream_config
+        if getattr(stream_config, "checkpoint_dir", None):
+            g_cfg = dataclasses.replace(
+                stream_config,
+                checkpoint_dir=os.path.join(stream_config.checkpoint_dir,
+                                            f"gamma{gi}"))
         t0 = tr.begin()
         factor = compute_factor(x, kp, budget,
                                 key=jax.random.PRNGKey(seed), gram_fn=gram_fn,
-                                stream=stream, stream_config=stream_config)
+                                stream=stream, stream_config=g_cfg)
         wait_for_factor(factor.G)
         t_stage1 += tr.end("cv", "stage1_factor", t0, gamma=float(gamma))
 
@@ -290,7 +300,7 @@ def grid_search(
             farm_cfg = dataclasses.replace(
                 config, max_epochs=config.max_epochs * len(Cs) + len(Cs))
             res, sstats = solve_streamed_auto(
-                factor.G, gtasks, farm_cfg, stream_config=stream_config,
+                factor.G, gtasks, farm_cfg, stream_config=g_cfg,
                 chain_next=chain, return_stats=True)
             wait_for_factor(res.w)
             dt = tr.end("cv", "grid_farm", t0, gamma=float(gamma),
@@ -316,8 +326,13 @@ def grid_search(
             t0 = tr.begin()
             tasks, _ = build_cv_tasks(labels, n_classes, C, val_masks,
                                       warm=warm if warm_start else None)
+            c_cfg = g_cfg
+            if g_cfg is not stream_config:   # checkpointing active: each C
+                c_cfg = dataclasses.replace(  # cell is its own resumable unit
+                    g_cfg, checkpoint_dir=os.path.join(g_cfg.checkpoint_dir,
+                                                       f"c{ci}"))
             res = _solve_routed(factor, tasks, config, solve_fn,
-                                stream, stream_config, polish_schedule)
+                                stream, c_cfg, polish_schedule)
             wait_for_factor(res.w)
             dt = tr.end("cv", "grid_cell", t0, gamma=float(gamma),
                         C=float(C))

@@ -42,7 +42,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core.dual_solver import SolveResult, SolverConfig, TaskBatch, solve_batch
+from repro.core.faults import classify_error
 from repro.core.kernel_fn import KernelParams, apply_epilogue
+from repro.core.resilience import WatchdogTimeout, WorkerStuckError
 from repro.core.trace import resolve as resolve_tracer
 
 
@@ -175,17 +177,31 @@ class _DeviceWorkers:
     queue — that device is the bottleneck) and each worker's
     ``queue/worker_idle`` (blocked waiting for the reader — the shared
     reader is the bottleneck), plus a per-device queue-depth gauge.
+
+    Fault tolerance: worker errors are recorded WITH the failing device's
+    name (`failed()`), so the degradation loop in `solve_tasks_streamed` can
+    quarantine exactly the lost devices; ``watchdog`` > 0 turns the barrier
+    into a deadline wait that raises a `WatchdogTimeout` full of queue/thread
+    diagnostics instead of hanging on a starved queue; `close` detects (and
+    reports) workers still alive after the join timeout instead of silently
+    leaking them.
     """
 
     def __init__(self, engines, depth: int, trace=None,
-                 names: Optional[Sequence[str]] = None):
+                 names: Optional[Sequence[str]] = None,
+                 watchdog: float = 0.0, join_timeout: float = 60.0):
         self._tr = resolve_tracer(trace)
         if names is None:
             names = [f"dev{i}" for i in range(len(engines))]
         self._names = {id(e): nm for e, nm in zip(engines, names)}
         self._queues = {id(e): queue.Queue(maxsize=max(2, depth))
                         for e in engines}
-        self._errors: List[BaseException] = []
+        self._errors: List[Tuple[str, BaseException]] = []
+        self._watchdog = watchdog
+        self._join_timeout = join_timeout
+        # Per-worker last-activity stamp (monotonic seconds + what it was):
+        # the watchdog's "who is stuck" diagnostic.
+        self._last = {nm: ("spawned", time.monotonic()) for nm in names}
         self._threads = []
         for e in engines:
             nm = self._names[id(e)]
@@ -202,14 +218,23 @@ class _DeviceWorkers:
             fn = q.get()
             try:
                 if fn is None:
+                    self._last[name] = ("exited", time.monotonic())
                     return
                 if tr.enabled:
                     tr.end("queue", "worker_idle", t0, device=name)
                     tr.counter(f"queue_depth/{name}", q.qsize())
+                self._last[name] = ("running", time.monotonic())
                 if not self._errors:     # fail fast: drain the rest as no-ops
                     fn()
+                self._last[name] = ("idle", time.monotonic())
             except BaseException as exc:   # noqa: BLE001 — re-raised at barrier
-                self._errors.append(exc)
+                self._errors.append((name, exc))
+                self._last[name] = (f"error:{type(exc).__name__}",
+                                    time.monotonic())
+                # A fault instant (not a span) so a failed run's exported
+                # trace shows WHERE the farm broke.
+                tr.instant("fault", "worker_error", device=name,
+                           error=type(exc).__name__)
             finally:
                 q.task_done()
 
@@ -225,17 +250,69 @@ class _DeviceWorkers:
         else:
             q.put(fn)
 
-    def barrier(self):
-        for q in self._queues.values():
-            q.join()
-        if self._errors:
-            raise self._errors[0]
+    def failed(self):
+        """Map of worker name -> first recorded exception (degradation input)."""
+        out = {}
+        for nm, exc in self._errors:
+            out.setdefault(nm, exc)
+        return out
 
-    def close(self):
+    def _diagnose(self) -> str:
+        now = time.monotonic()
+        lines = []
+        for (eid, q), th in zip(self._queues.items(), self._threads):
+            nm = th.name.split("/", 1)[-1]
+            state, when = self._last.get(nm, ("unknown", now))
+            lines.append(f"  {th.name}: alive={th.is_alive()} "
+                         f"queued={q.qsize()} unfinished={q.unfinished_tasks} "
+                         f"last={state} {now - when:.1f}s ago")
+        return "\n".join(lines)
+
+    def barrier(self):
+        if self._watchdog > 0:
+            deadline = time.monotonic() + self._watchdog
+            for q in self._queues.values():
+                starved = False
+                with q.all_tasks_done:
+                    while q.unfinished_tasks:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            starved = True
+                            break
+                        q.all_tasks_done.wait(remaining)
+                if starved:
+                    # raised OUTSIDE the queue lock: _diagnose reads qsize(),
+                    # which needs the same (non-reentrant) mutex
+                    raise WatchdogTimeout(
+                        f"farm barrier starved past {self._watchdog:.1f}s; "
+                        "worker states:\n" + self._diagnose())
+        else:
+            for q in self._queues.values():
+                q.join()
+        if self._errors:
+            raise self._errors[0][1]
+
+    def close(self, suppress: bool = False):
         for q in self._queues.values():
             q.put(None)
+        stuck = []
         for th in self._threads:
-            th.join(timeout=60.0)
+            th.join(timeout=self._join_timeout)
+            if th.is_alive():
+                stuck.append(th.name)
+        if stuck:
+            msg = (f"worker threads still alive after "
+                   f"{self._join_timeout:.0f}s join: {', '.join(stuck)}\n"
+                   + self._diagnose())
+            self._tr.instant("fault", "worker_leak", threads=len(stuck))
+            if suppress:
+                # Called while an exception propagates (the driver's
+                # finally): raising here would REPLACE it — degrade to a
+                # warning, the farm is already failing for the real reason.
+                import warnings
+                warnings.warn(msg, RuntimeWarning, stacklevel=2)
+            else:
+                raise WorkerStuckError(msg)
 
 
 def _scatter_results(parts: Sequence[np.ndarray], results, T: int,
@@ -344,22 +421,78 @@ def solve_tasks_streamed(
             n_devices=len(subs))
 
     epoch_fn = epoch_fn or default_epoch_fn()
-    # One tile for ALL engines (the shared reader stages each block once);
-    # sized by the fattest shard so every device's in-flight set fits.
-    tile = auto_tile_rows(n, rank, max(len(p) for p in parts), cfg)
     # One int8 scale-table cache for the whole farm: every engine streams
     # the same G, so the global group scales are computed once, not once
     # per device.
     scale_cache: dict = {}
-    engines = [_Stage2Engine(G, sub, config, cfg, epoch_fn=epoch_fn,
-                             device=d, tile=tile, scale_cache=scale_cache,
-                             chain_next=ch)
-               for d, sub, ch in zip(devices, subs, sub_chains)]
-    workers = _DeviceWorkers(engines, depth=max(2, cfg.prefetch),
-                             trace=cfg.trace,
-                             names=[f"dev{i}" for i in range(len(engines))])
-    reader = drive_streamed_engines(engines, G, config, cfg, tile=tile,
-                                    fanout=workers)
+    tr = resolve_tracer(cfg.trace)
+
+    # Fault tolerance: the guard snapshots the GLOBAL-task-keyed solver state
+    # at every epoch boundary (in memory when fail_fast=False, to disk every
+    # checkpoint_every full passes), so a lost device's shard can be re-split
+    # onto the survivors and the farm re-entered from the last boundary.
+    guard = None
+    if cfg.checkpoint_dir or not cfg.fail_fast:
+        from repro.core.resilience import StreamGuard, g_fingerprint
+        guard = StreamGuard(cfg, n=n, rank=rank, sizes=row_counts,
+                            g_fp=g_fingerprint(G), degrade=not cfg.fail_fast)
+        if cfg.checkpoint_dir and cfg.resume:
+            snap = guard.try_resume()
+            if snap is not None:
+                guard.adopt(snap)
+
+    avail = list(devices)
+    dev_ids = list(range(len(avail)))   # original indices — names stay
+    #   stable across quarantines so per-device fault specs / traces line up
+    while True:
+        parts = (balance_chain_split(row_counts, chain_next, len(avail))
+                 if chain_next is not None
+                 else balance_task_split(row_counts, len(avail)))
+        subs = [TaskBatch(idx[p], y[p], c[p], a0[p]) for p in parts]
+        sub_chains = [_local_chain(chain_next, p) for p in parts]
+        # One tile for ALL engines (the shared reader stages each block
+        # once); sized by the fattest shard so every in-flight set fits.
+        tile = auto_tile_rows(n, rank, max(len(p) for p in parts), cfg)
+        names = [f"dev{dev_ids[j]}" for j in range(len(avail))]
+        engines = [_Stage2Engine(G, sub, config, cfg, epoch_fn=epoch_fn,
+                                 device=d, tile=tile,
+                                 scale_cache=scale_cache, chain_next=ch,
+                                 name=nm, task_ids=p)
+                   for d, sub, ch, nm, p in zip(avail, subs, sub_chains,
+                                                names, parts)]
+        if guard is not None and guard.mem is not None:
+            from repro.core.resilience import restore_engines
+            restore_engines(engines, guard.mem)
+        workers = _DeviceWorkers(engines, depth=max(2, cfg.prefetch),
+                                 trace=cfg.trace, names=names,
+                                 watchdog=cfg.watchdog_seconds)
+        try:
+            reader = drive_streamed_engines(engines, G, config, cfg,
+                                            tile=tile, fanout=workers,
+                                            guard=guard)
+            break
+        except Exception:
+            failed = workers.failed()
+            if (cfg.fail_fast or guard is None or not failed
+                    or any(classify_error(e) != "persistent"
+                           for e in failed.values())):
+                raise
+            keep = [j for j in range(len(avail)) if names[j] not in failed]
+            if not keep:
+                raise
+            # Quarantine the lost devices; solver state rolls back to the
+            # guard's last epoch-boundary snapshot and the next lap re-splits
+            # every task over the survivors (chain-aware LPT, same as a
+            # fresh solve at that device count — per-task trajectories are
+            # placement-invariant, so the result is bit-equal to a clean
+            # run on the surviving devices).
+            tr.instant("recovery", "quarantine",
+                       lost=len(avail) - len(keep), survivors=len(keep),
+                       resume_epoch=int(guard.mem["meta"]["epoch_next"])
+                       if guard.mem is not None else 0)
+            avail = [avail[j] for j in keep]
+            dev_ids = [dev_ids[j] for j in keep]
+            guard.adopt_mem()
     pairs = [e.result() for e in engines]
     res = _scatter_results(parts, [p[0] for p in pairs], T, idx.shape[1],
                            rank)
@@ -367,7 +500,7 @@ def solve_tasks_streamed(
         return res
     return res, merge_stream_stats(
         reader, [p[1] for p in pairs], seconds=time.perf_counter() - t0,
-        n_devices=len(engines))
+        n_devices=len(engines), carry=guard.carry if guard else None)
 
 
 def solve_tasks_streamed_mesh(

@@ -1,0 +1,171 @@
+"""Deterministic fault injection + the streaming error taxonomy.
+
+The chaos suite (tests/test_resilience.py) has to prove every recovery path
+of the fault-tolerant streaming stack — checkpoint/resume, transient-retry,
+device quarantine, watchdog — without wall-clock randomness: a fault fires
+when a *site* is reached with matching attributes (block index, device name,
+epoch), never on a timer.  Production code calls `check(site, **attrs)` at
+its injection points; with no plan installed that is a single module-level
+``None`` test (the same zero-overhead discipline as `core/trace.py`'s NULL
+tracer).
+
+Sites wired into the pipelines:
+
+    "reader"          shared stage-2 block reader, attrs: block
+    "h2d"             engine block/vector puts, attrs: device, epoch
+    "epoch_boundary"  the stage-2 driver after each epoch, attrs: epoch
+    "stage1"          stage-1 chunk stream, attrs: chunk
+    "stall"           worker-queue stall (waits on a plan-held Event —
+                      the test releases it; no sleeps)
+
+The taxonomy below is ALSO the real one: `classify_error` is what the farm
+uses to decide between bounded retry (transient), device quarantine
+(persistent), and fail-fast re-raise (fatal) for genuine runtime errors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional
+
+
+class FaultError(Exception):
+    """Base class of injected (and injectable) streaming faults."""
+
+
+class TransientH2DError(FaultError):
+    """A transfer failure worth retrying (cf. spurious DMA/RPC hiccups)."""
+
+
+class DeviceLostError(FaultError):
+    """A device is gone for good — quarantine it, re-shard onto survivors."""
+
+
+class InjectedIOError(OSError, FaultError):
+    """Reader-side IO failure (disk/page-cache error while staging a block)."""
+
+
+class SimulatedKill(BaseException):
+    """Stands in for SIGKILL / sys.exit mid-run.  BaseException on purpose:
+    recovery code that catches ``Exception`` must NOT swallow it — only the
+    test harness (or a real process boundary) sees it."""
+
+
+#: substrings of real runtime errors that are worth one more try
+_TRANSIENT_MARKERS = ("RESOURCE_EXHAUSTED", "UNAVAILABLE", "DEADLINE_EXCEEDED",
+                      "transient")
+#: substrings that mean the device itself is gone
+_PERSISTENT_MARKERS = ("DEVICE_LOST", "device lost", "INTERNAL: Failed to",
+                       "NCCL", "DATA_LOSS")
+
+
+def classify_error(exc: BaseException) -> str:
+    """Map an exception to the recovery taxonomy: "transient" (bounded retry),
+    "persistent" (quarantine the device, re-shard), or "fatal" (re-raise)."""
+    if isinstance(exc, TransientH2DError):
+        return "transient"
+    if isinstance(exc, DeviceLostError):
+        return "persistent"
+    msg = str(exc)
+    if any(m in msg for m in _TRANSIENT_MARKERS):
+        return "transient"
+    if any(m in msg for m in _PERSISTENT_MARKERS):
+        return "persistent"
+    return "fatal"
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One deterministic fault: fires at ``site`` when every key in ``at``
+    equals the corresponding `check` attribute, up to ``times`` times.
+
+    ``kind``: "transient" -> TransientH2DError, "persistent" ->
+    DeviceLostError, "io" -> InjectedIOError, "kill" -> SimulatedKill,
+    "stall" -> block on the plan's Event until `FaultPlan.release`.
+    """
+
+    site: str
+    kind: str = "transient"
+    at: Dict[str, object] = dataclasses.field(default_factory=dict)
+    times: int = 1
+    fired: int = 0
+
+    def matches(self, site: str, attrs: Dict[str, object]) -> bool:
+        if site != self.site or self.fired >= self.times:
+            return False
+        return all(k in attrs and attrs[k] == v for k, v in self.at.items())
+
+
+class FaultPlan:
+    """A set of `FaultSpec`s plus the shared stall Event.  Thread-safe:
+    device workers hit `check` concurrently."""
+
+    def __init__(self, specs: Optional[List[FaultSpec]] = None):
+        self.specs: List[FaultSpec] = list(specs or [])
+        self._lock = threading.Lock()
+        self._stall = threading.Event()
+        self.fired: List[Dict[str, object]] = []   # audit log for tests
+
+    def add(self, site: str, kind: str = "transient", times: int = 1,
+            **at) -> "FaultPlan":
+        self.specs.append(FaultSpec(site=site, kind=kind, at=dict(at),
+                                    times=times))
+        return self
+
+    def release(self) -> None:
+        """Un-stall every "stall" fault (the deterministic replacement for a
+        slow-device sleep)."""
+        self._stall.set()
+
+    def check(self, site: str, attrs: Dict[str, object]) -> None:
+        hit = None
+        with self._lock:
+            for spec in self.specs:
+                if spec.matches(site, attrs):
+                    spec.fired += 1
+                    self.fired.append(dict(site=site, kind=spec.kind, **attrs))
+                    hit = spec
+                    break
+        if hit is None:
+            return
+        if hit.kind == "stall":
+            self._stall.wait()
+            return
+        where = f"{site} {attrs}"
+        if hit.kind == "transient":
+            raise TransientH2DError(f"injected transient fault at {where}")
+        if hit.kind == "persistent":
+            raise DeviceLostError(f"injected device loss at {where}")
+        if hit.kind == "io":
+            raise InjectedIOError(f"injected IO error at {where}")
+        if hit.kind == "kill":
+            raise SimulatedKill(f"injected kill at {where}")
+        raise ValueError(f"unknown fault kind {hit.kind!r}")
+
+
+_PLAN: Optional[FaultPlan] = None
+
+
+def install(plan: FaultPlan) -> FaultPlan:
+    """Install ``plan`` process-wide (tests only; uninstall in a finally)."""
+    global _PLAN
+    _PLAN = plan
+    return plan
+
+
+def uninstall() -> None:
+    global _PLAN
+    if _PLAN is not None:
+        _PLAN.release()   # never leave a worker parked on a stall Event
+    _PLAN = None
+
+
+def active() -> Optional[FaultPlan]:
+    return _PLAN
+
+
+def check(site: str, **attrs) -> None:
+    """Injection point: no-op (one None test) unless a plan is installed."""
+    if _PLAN is None:
+        return
+    _PLAN.check(site, attrs)

@@ -89,6 +89,8 @@ from repro.core.block_cache import (HotRowBlockCache, block_key,
                                     violation_recency_scores_tasks)
 from repro.core.dual_solver import (DELTA_EPS, Q_FLOOR, SolveResult,
                                     SolverConfig, TaskBatch)
+from repro.core.faults import check as _fault_check
+from repro.core.faults import classify_error
 from repro.core.quant import (GROUP_ROWS, QuantBlock, dequant_rows,
                               encode_rows, group_scales, quantize_block)
 from repro.core.streaming import BYTES_F32, StreamConfig, tune_prefetch
@@ -494,7 +496,17 @@ def iter_shared_blocks(G: np.ndarray, tile: int, block_dtype: str,
     for b in range(math.ceil(n / tile)):
         s, e = b * tile, min((b + 1) * tile, n)
         t0 = tr.begin()
-        gb_send = prep_block(G[s:e], tile, block_dtype, group, stage)
+        try:
+            _fault_check("reader", block=b)
+            gb_send = prep_block(G[s:e], tile, block_dtype, group, stage)
+        except BaseException as exc:
+            # Close the in-flight span before propagating so a failed run
+            # still exports a valid, complete trace timeline.
+            tr.end("read", "stage_block", t0, rows=e - s, block=b,
+                   error=type(exc).__name__)
+            tr.instant("fault", "reader_error", block=b,
+                       error=type(exc).__name__)
+            raise
         tr.end("read", "stage_block", t0, bytes=int(gb_send.nbytes),
                rows=e - s, block=b)
         yield slice(s, e), e - s, gb_send
@@ -573,10 +585,21 @@ class _Stage2Engine:
 
     def __init__(self, G, tasks: TaskBatch, config: SolverConfig,
                  cfg: StreamConfig, *, epoch_fn: Callable, device, tile: int,
-                 scale_cache: Optional[dict] = None, chain_next=None):
+                 scale_cache: Optional[dict] = None, chain_next=None,
+                 name: str = "dev0", task_ids=None):
         self.G = G
         self.config, self.cfg = config, cfg
         self.epoch_fn, self.device, self.tile = epoch_fn, device, tile
+        self.name = name
+        # Global task indices of this shard — the key space snapshots are
+        # written in, so a checkpoint restores onto ANY device split.
+        self.task_ids = (np.arange(tasks.n_tasks, dtype=np.int64)
+                         if task_ids is None
+                         else np.asarray(task_ids, np.int64))
+        # Transient-H2D retry policy: 0 retries under fail_fast (the default
+        # pre-PR semantics — a put either succeeds or raises immediately).
+        self._retries = 0 if cfg.fail_fast else cfg.max_retries
+        self._backoff = cfg.retry_backoff
         n, rank = G.shape
         self.n, self.rank = n, rank
         self.idx = np.asarray(tasks.idx)
@@ -767,13 +790,42 @@ class _Stage2Engine:
         self._put_mark = self.stats.put_seconds
         self._drain_mark = self.stats.drain_seconds
 
+    def _h2d(self, a):
+        """The engine's H2D put with the transient-retry policy: under
+        `fail_fast` (default) this is exactly `_put` plus the fault-injection
+        probe; with retries enabled, transient failures back off
+        exponentially and re-issue the put — `_put` never partially applies
+        (`jax.device_put` either returns an array or raises), so a retry is
+        bit-identical to a first-try success."""
+        attempt = 0
+        while True:
+            try:
+                _fault_check("h2d", device=self.name, epoch=self._epoch)
+                out = _put(a, self.device)
+            except Exception as exc:
+                if (attempt >= self._retries
+                        or classify_error(exc) != "transient"):
+                    raise
+                self.trace.instant("fault", "h2d_retry", device=self.name,
+                                   attempt=attempt,
+                                   error=type(exc).__name__)
+                delay = self._backoff * (2.0 ** attempt)
+                if delay > 0:
+                    time.sleep(delay)
+                attempt += 1
+                continue
+            if attempt:
+                self.trace.instant("recovery", "h2d_retry_ok",
+                                   device=self.name, attempts=attempt)
+            return out
+
     def _put_block(self, gb_send, cache_key: Optional[bytes] = None):
         t0 = self.trace.begin()
         if isinstance(gb_send, QuantBlock):
             # int8 wire: ship values + compact scale table, dequantise fused
             # on device — a quarter of the f32 bytes crossed the bus.
-            vals = _put(gb_send.values, self.device)
-            scales = _put(gb_send.scales, self.device)
+            vals = self._h2d(gb_send.values)
+            scales = self._h2d(gb_send.scales)
             self.stats.put_seconds += self.trace.end(
                 "h2d", "put_block", t0, bytes=int(gb_send.nbytes))
             self.stats.bytes_put += gb_send.nbytes
@@ -783,7 +835,7 @@ class _Stage2Engine:
                 self._cache_store(cache_key, (vals, scales, gb_send.group),
                                   gb_send.nbytes)
             return dequant_rows(vals, scales, gb_send.group)
-        gb = _put(gb_send, self.device)
+        gb = self._h2d(gb_send)
         self.stats.put_seconds += self.trace.end(
             "h2d", "put_block", t0, bytes=int(gb_send.nbytes))
         self.stats.bytes_put += gb_send.nbytes
@@ -809,7 +861,7 @@ class _Stage2Engine:
 
     def _put_vec(self, vec, fill, dtype, length):
         t0 = self.trace.begin()
-        b = _put(_padded(np.asarray(vec), fill, dtype, length), self.device)
+        b = self._h2d(_padded(np.asarray(vec), fill, dtype, length))
         self.stats.put_seconds += self.trace.end(
             "h2d", "put_vec", t0, bytes=int(b.nbytes))
         self.stats.bytes_h2d += b.nbytes
@@ -920,8 +972,17 @@ class _Stage2Engine:
             self.first_sweep[t] = self._epoch + 1
         if self._kind != "full":
             return
-        # Re-compact: cheap epochs stream only rows active for at least one
-        # unconverged task — shrinking cuts H2D bytes, not just FLOPs.
+        self._recompact()
+
+    def _recompact(self, record: bool = True) -> None:
+        """Rebuild the compacted cheap-epoch state from the current
+        unchanged-counters — a pure function of post-full-pass solver state,
+        which is why checkpoints snapshot only that state and re-run this at
+        restore (``record=False``: skip the stats/history appends the
+        boundary's carry already contains).
+
+        Cheap epochs then stream only rows active for at least one
+        unconverged task — shrinking cuts H2D bytes, not just FLOPs."""
         t0 = self.trace.begin()
         self.act, self.act_G, self.act_q = None, None, None
         self._cw = {}
@@ -933,7 +994,8 @@ class _Stage2Engine:
                         for t in live2}
             union = np.unique(np.concatenate(
                 [self.ids[t][act_take[t]] for t in live2]))
-            self.stats.active_history.append(int(len(union)))
+            if record:
+                self.stats.active_history.append(int(len(union)))
             if len(union) < self.n:
                 self.act = union
                 # Gather (and, for bf16/int8 wire blocks, re-encode) ONCE
@@ -987,17 +1049,19 @@ class _Stage2Engine:
                             [self.u_r[t][act_take[t]] for t in live2],
                             [self.ids[t][act_take[t]] for t in live2]))
                     self.stats.cache_evictions = self.cache.evictions
-                    self.trace.instant(
-                        "cache", "plan", blocks=n_blocks,
-                        evictions=self.cache.evictions,
-                        resident_bytes=self.cache.resident_bytes)
+                    if record:
+                        self.trace.instant(
+                            "cache", "plan", blocks=n_blocks,
+                            evictions=self.cache.evictions,
+                            resident_bytes=self.cache.resident_bytes)
         if self.cache is not None and self._act_keys is None:
             # No compaction to serve (union == n, all tasks converged, or
             # shrinking off): nothing the cache could hit — drop the pins.
             self.cache.invalidate()
             self.stats.cache_evictions = self.cache.evictions
-            self.trace.instant("cache", "invalidate",
-                               evictions=self.cache.evictions)
+            if record:
+                self.trace.instant("cache", "invalidate",
+                                   evictions=self.cache.evictions)
         self.trace.end(
             "compact", "recompact", t0,
             union=int(len(self.act)) if self.act is not None else self.n,
@@ -1128,13 +1192,13 @@ class _InlineFanout:
     def barrier(self):
         pass
 
-    def close(self):
+    def close(self, suppress: bool = False):
         pass
 
 
 def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
                            SolverConfig, cfg: StreamConfig, *, tile: int,
-                           fanout=None) -> Stage2StreamStats:
+                           fanout=None, guard=None) -> Stage2StreamStats:
     """Lockstep epoch driver over one or more engines.
 
     Reads each (tile, B) block of G ONCE per shared pass (warm-start init,
@@ -1144,6 +1208,14 @@ def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
     count.  Compacted cheap epochs run engine-locally and concurrently.
     Returns the shared-reader stats record (G-block traffic + epoch/pass
     counters); per-engine records accumulate task-vector traffic.
+
+    ``guard`` (a `resilience.StreamGuard`) adds fault tolerance: epoch-
+    boundary snapshots every `checkpoint_every` full passes, an in-memory
+    degradation snapshot, and resume — the loop starts at the guard's
+    ``start_epoch`` and the init pass is skipped when a restored snapshot
+    already accumulated w0 (resumed ladder successors in ``pending_init``
+    instead ride the next promoted full pass, exactly as the uninterrupted
+    run would).
     """
     fan = fanout or _InlineFanout()
     tr = resolve_tracer(cfg.trace)
@@ -1172,14 +1244,25 @@ def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
         fan.barrier()
         return reader.bytes_h2d - g0
 
+    ok = False
     try:
+        if guard is not None:
+            guard.on_start(engines, reader)
         init = [e for e in engines if e.needs_init]
-        if init:
+        if init and (guard is None or not guard.init_done):
+            # Resume skips this: a restored snapshot already holds the
+            # accumulated w0 (restored `pending_init` tasks are ladder
+            # successors seeded at the boundary — their w0 rides the next
+            # promoted FULL pass, never a fresh init pass, so their
+            # `first_sweep` anchors match the uninterrupted run).
             shared_pass(init, "init")   # init traffic counts, but no epoch
+        if guard is not None and not guard.init_done:
+            guard.mark_init(engines, reader)
 
         period = config.full_pass_period if config.shrink else 1
         tuned = not cfg.autotune_prefetch
-        for epoch in range(config.max_epochs):
+        start = guard.start_epoch if guard is not None else 0
+        for epoch in range(start, config.max_epochs):
             live = [e for e in engines if not e.all_done]
             if not live:
                 break
@@ -1214,11 +1297,22 @@ def drive_streamed_engines(engines: Sequence[_Stage2Engine], G, config:
                     reader.epoch_bytes.append(0)
             for e in live:
                 e.finish_epoch(epoch)
+            if guard is not None and full:
+                # Snapshot AFTER finish_epoch (and after end_pass's ladder
+                # seeding + re-compaction) — the boundary state restore
+                # replays from; the kill probe sits after the save so a
+                # killed run always has this boundary on disk.
+                guard.on_boundary(engines, reader, epoch, trace=tr)
+            _fault_check("epoch_boundary", epoch=epoch)
             if tr.enabled:
                 _trace_epoch(tr, te0, epoch, "full" if full else "cheap",
                              live, reader, cv0)
+        ok = True
     finally:
-        fan.close()
+        # On the failure path close() must not raise over the propagating
+        # exception — stuck workers are reported as a trace instant/warning
+        # instead (see _DeviceWorkers.close).
+        fan.close(suppress=not ok)
     return reader
 
 
@@ -1263,14 +1357,22 @@ def _elementwise_sum(lists: Sequence[Sequence[int]]) -> List[int]:
 
 def merge_stream_stats(reader: Stage2StreamStats,
                        per_dev: Sequence[Stage2StreamStats], *,
-                       seconds: float, n_devices: int) -> Stage2StreamStats:
+                       seconds: float, n_devices: int,
+                       carry=None) -> Stage2StreamStats:
     """Aggregate the shared-reader record and the per-device engine records
     into the mesh-level `Stage2StreamStats`.  G blocks staged by the shared
     reader are counted ONCE in `bytes_h2d` (that is the point: per-pass
     unique G traffic does not scale with device count); task-vector traffic
     and compacted-epoch gathers sum over devices because they are
     partitioned, not replicated; `bytes_put` sums every device's physical
-    DMA copies (== `bytes_h2d` at one device, G component ~D x beyond)."""
+    DMA copies (== `bytes_h2d` at one device, G component ~D x beyond).
+
+    ``carry`` is a `resilience` stats-carry tree of the segments BEFORE a
+    resume (or device-quarantine restart): counters sum, per-epoch lists are
+    prepended, so the merged record reads like one uninterrupted run.  Stats
+    of a failed partial pass are rolled back to the last epoch boundary with
+    the solver state — each `epoch_bytes` entry remains a COMPLETED pass's
+    figure, which is what the device-count-invariance claim is asserted on."""
     out = Stage2StreamStats(tile_rows=reader.tile_rows,
                             block_dtype=reader.block_dtype,
                             n_devices=n_devices)
@@ -1316,6 +1418,9 @@ def merge_stream_stats(reader: Stage2StreamStats,
     out.prefetch_final = max((s.prefetch_final for s in per_dev), default=0)
     out.seconds = seconds
     out.per_device = list(per_dev) if n_devices > 1 else None
+    if carry is not None:
+        from repro.core.resilience import apply_carry
+        apply_carry(out, carry)
     return out
 
 
@@ -1351,13 +1456,27 @@ def solve_batch_streamed(
     tile = auto_tile_rows(n, rank, tasks.n_tasks, cfg)
     eng = _Stage2Engine(G, tasks, config, cfg, epoch_fn=epoch_fn,
                         device=device, tile=tile, chain_next=chain_next)
-    reader = drive_streamed_engines([eng], G, config, cfg, tile=tile)
+    guard = None
+    if cfg.checkpoint_dir:
+        from repro.core.resilience import (StreamGuard, g_fingerprint,
+                                           restore_engines)
+        sizes = np.array([len(eng.ids[t]) for t in range(eng.T)], np.int64)
+        guard = StreamGuard(cfg, n=n, rank=rank, sizes=sizes,
+                            g_fp=g_fingerprint(G))
+        if cfg.resume:
+            snap = guard.try_resume()
+            if snap is not None:
+                guard.adopt(snap)
+                restore_engines([eng], snap)
+    reader = drive_streamed_engines([eng], G, config, cfg, tile=tile,
+                                    guard=guard)
     res, est = eng.result()
     if not return_stats:
         return res
     stats = merge_stream_stats(reader, [est],
                                seconds=time.perf_counter() - t_start,
-                               n_devices=1)
+                               n_devices=1,
+                               carry=guard.carry if guard else None)
     return res, stats
 
 
@@ -1369,14 +1488,18 @@ def solve_streamed_auto(
     stream_config: Optional[StreamConfig] = None,
     chain_next=None,
     return_stats: bool = False,
+    resume: Optional[bool] = None,
 ):
     """The streamed stage-2 entry point every routed caller (`LPDSVM.fit`,
     `core/cv.py`, `solve_polished`'s final level, the CLI) goes through: with
     more than one local device the multi-device task farm — overlapped
     behind the shared block reader by default, or serial per-device streams
     when `StreamConfig.overlap_devices` is off — otherwise the single-device
-    block stream."""
+    block stream.  ``resume`` overrides `StreamConfig.resume`: continue from
+    the latest epoch-boundary snapshot in `StreamConfig.checkpoint_dir`."""
     cfg = stream_config or StreamConfig()
+    if resume is not None and resume != cfg.resume:
+        cfg = dataclasses.replace(cfg, resume=bool(resume))
     devices = jax.local_devices()
     if len(devices) > 1 and tasks.n_tasks > 1:
         from repro.core.distributed import solve_tasks_streamed

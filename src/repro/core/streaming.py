@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.faults import check as _fault_check
 from repro.core.kernel_fn import KernelParams, gram
 from repro.core.quant import GROUP_ROWS, quantize_rows
 from repro.core.trace import resolve as resolve_tracer
@@ -86,6 +87,29 @@ class StreamConfig:
                                          # pipeline timeline; None -> the
                                          # process-wide tracer if installed,
                                          # else the no-op fast path
+    # -- fault tolerance (core/resilience.py) --------------------------------
+    checkpoint_dir: Optional[str] = None  # where stage-2 epoch snapshots and
+                                         # the resumable stage-1 memmap live;
+                                         # None -> checkpointing off
+    checkpoint_every: int = 0            # full passes between stage-2 disk
+                                         # snapshots (0 = never snapshot)
+    resume: bool = False                 # continue from the latest snapshot /
+                                         # completed stage-1 chunk ranges in
+                                         # checkpoint_dir
+    fail_fast: bool = True               # True (default): any worker error
+                                         # kills the solve (pre-PR semantics).
+                                         # False: transient H2D errors retry
+                                         # with backoff, lost devices are
+                                         # quarantined and their task shard
+                                         # re-split onto survivors from the
+                                         # last epoch-boundary snapshot
+    max_retries: int = 3                 # bounded transient-H2D retries per
+                                         # put (only when fail_fast=False)
+    retry_backoff: float = 0.05          # base seconds of the exponential
+                                         # retry backoff (doubles per attempt)
+    watchdog_seconds: float = 0.0        # farm-barrier starvation watchdog:
+                                         # raise a queue/thread diagnostic
+                                         # instead of hanging (0 = off)
 
     def __post_init__(self):
         if self.prefetch < 1:
@@ -106,6 +130,16 @@ class StreamConfig:
             raise ValueError("prefetch_cap must be >= 1")
         if self.cache_budget_bytes is not None and self.cache_budget_bytes < 0:
             raise ValueError("cache_budget_bytes must be >= 0")
+        if self.checkpoint_every < 0:
+            raise ValueError("checkpoint_every must be >= 0")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.retry_backoff < 0:
+            raise ValueError("retry_backoff must be >= 0")
+        if self.watchdog_seconds < 0:
+            raise ValueError("watchdog_seconds must be >= 0")
+        if self.resume and not self.checkpoint_dir:
+            raise ValueError("resume=True requires checkpoint_dir")
 
 
 def tune_prefetch(h2d_seconds: float, compute_seconds: float, prefetch: int,
@@ -132,6 +166,11 @@ class Stage1StreamStats:
 
     chunks: int = 0
     rows: int = 0
+    chunks_skipped: int = 0           # chunks already covered by a resumed
+                                      # stage-1 progress log (zero H2D)
+    rows_resumed: int = 0             # rows those skipped chunks carried
+    rows_skipped: int = 0             # bad ingest rows dropped by the
+                                      # on_bad_row="skip" policy upstream
     bytes_h2d: int = 0
     bytes_scales: int = 0
     put_seconds: float = 0.0          # host time inside chunk H2D puts
@@ -235,6 +274,7 @@ def stream_factor_blocks(
     prefetch_cap: int = 8,
     stats: Optional[Stage1StreamStats] = None,
     trace=None,
+    progress=None,
 ) -> np.ndarray:
     """Fill a host-resident G from an *iterator* of dense row blocks.
 
@@ -260,6 +300,12 @@ def stream_factor_blocks(
     deepened via `tune_prefetch` when H2D put time exceeds drain/compute
     time (bounded by ``prefetch_cap``); the tuned depth lands in
     ``stats.prefetch_final``.
+
+    ``progress`` (a `resilience.Stage1Progress`) makes the stream resumable:
+    row ranges already logged as complete are skipped (counted in
+    ``stats.chunks_skipped`` / ``rows_resumed``), and every drained chunk is
+    durably marked — G flushed before the log line — so a killed stage 1
+    restarts at the first missing chunk.
     """
     rank = projector.shape[1]
     if out is None:
@@ -290,6 +336,7 @@ def stream_factor_blocks(
                              jax.device_put(np.asarray(projector, np.float32), d)))
 
     inflight = collections.deque()  # (start, end, device_array)
+    g_flush = getattr(out, "flush", None)   # memmap: make marked rows durable
 
     def drain_one():
         s, e, gb = inflight.popleft()
@@ -297,6 +344,8 @@ def stream_factor_blocks(
         out[s:e] = np.asarray(gb)   # blocks on this chunk only
         st.drain_seconds += tr.end("drain", "stage1_fetch", t0,
                                    bytes=int(gb.nbytes), rows=e - s)
+        if progress is not None:
+            progress.mark(s, e, flush=g_flush)
 
     def put(a, d):
         t0 = tr.begin()
@@ -314,6 +363,14 @@ def stream_factor_blocks(
         e = s + xb.shape[0]
         if e > n:
             raise ValueError(f"block iterator produced more than {n} rows")
+        if progress is not None and progress.covered(s, e):
+            # Resumed: this row range is already durably in G — skip the
+            # whole put/compute/drain for it (zero H2D).
+            st.chunks_skipped += 1
+            st.rows_resumed += e - s
+            s = e
+            continue
+        _fault_check("stage1", chunk=i)
         d = devices[i % len(devices)]
         lm, pr = resident[i % len(devices)]
         if quant:
@@ -474,13 +531,30 @@ def _streamed_factor_from_landmarks(
 
     chunk = auto_chunk_rows(n, p, landmarks.shape[0], config)
     stats = Stage1StreamStats()
-    G = stream_factor_blocks(
-        make_blocks(chunk), n, landmarks, projector, params,
-        prefetch=config.prefetch, gram_fn=gram_fn, devices=devices,
-        wire_dtype=config.stage1_dtype,
-        quant_group_rows=config.quant_group_rows,
-        autotune_prefetch=config.autotune_prefetch,
-        prefetch_cap=config.prefetch_cap, stats=stats, trace=config.trace)
+    out = progress = None
+    if config.checkpoint_dir:
+        # Resumable stage 1: G fills an on-disk memmap and completed chunk
+        # ranges are logged durably, so a killed run restarts at the first
+        # missing chunk.  Landmarks/projector are deterministic from the
+        # PRNG key, so the recomputed resident state matches the logged G.
+        import os as _os
+        from repro.core.resilience import Stage1Progress, stage1_memmap
+        out = stage1_memmap(config.checkpoint_dir, n, rank, config.resume)
+        progress = Stage1Progress(
+            _os.path.join(config.checkpoint_dir, "stage1_progress.log"),
+            n, rank, resume=config.resume)
+    try:
+        G = stream_factor_blocks(
+            make_blocks(chunk), n, landmarks, projector, params,
+            prefetch=config.prefetch, gram_fn=gram_fn, devices=devices,
+            wire_dtype=config.stage1_dtype,
+            quant_group_rows=config.quant_group_rows,
+            autotune_prefetch=config.autotune_prefetch,
+            prefetch_cap=config.prefetch_cap, stats=stats, out=out,
+            trace=config.trace, progress=progress)
+    finally:
+        if progress is not None:
+            progress.close()
 
     return nystrom.LowRankFactor(
         G=G, landmarks=landmarks, projector=projector, eigvals=evals,

@@ -129,12 +129,36 @@ class LPDSVM:
     def fit(self, x: np.ndarray, y: np.ndarray,
             factor: Optional[LowRankFactor] = None,
             warm_alpha: Optional[np.ndarray] = None,
-            trace=None) -> "LPDSVM":
+            trace=None,
+            checkpoint_dir: Optional[str] = None,
+            checkpoint_every: Optional[int] = None,
+            resume: Optional[bool] = None) -> "LPDSVM":
         """Two-stage fit.  ``trace`` optionally records the run's pipeline
         timeline (a `core.trace.Tracer`): it is threaded into the streamed
         paths via `StreamConfig.trace`, wins over an installed process-wide
         tracer, and with ``trace=None`` the no-op fast path keeps outputs
-        bit-identical to an un-instrumented fit."""
+        bit-identical to an un-instrumented fit.
+
+        ``checkpoint_dir`` / ``checkpoint_every`` / ``resume`` thread
+        fault-tolerance into the streamed paths (core/resilience.py): stage 1
+        resumes completed G row-chunks from ``<dir>/stage1_G.npy`` and stage 2
+        snapshots full solver state every ``checkpoint_every`` full passes,
+        resumable bit-exactly after a kill.  Setting any of them forces the
+        streamed route (checkpoints only exist there); they are folded into
+        ``stream_config`` exactly like ``trace``."""
+        if (checkpoint_dir is not None or checkpoint_every is not None
+                or resume is not None):
+            upd = {}
+            if checkpoint_dir is not None:
+                upd["checkpoint_dir"] = checkpoint_dir
+            if checkpoint_every is not None:
+                upd["checkpoint_every"] = int(checkpoint_every)
+            if resume is not None:
+                upd["resume"] = bool(resume)
+            self.stream_config = dataclasses.replace(
+                self.stream_config or StreamConfig(), **upd)
+            if self.stream is None and self.stream_config.checkpoint_dir:
+                self.stream = True   # checkpoints only exist on that path
         if trace is not None and self.stream_config is not None \
                 and self.stream_config.trace is None:
             self.stream_config = dataclasses.replace(self.stream_config,

@@ -290,13 +290,16 @@ class Tracer:
             lines.append(f"  overlap efficiency: {ov:.2f} "
                          f"(fraction of read/h2d time hidden under "
                          f"compute on other threads)")
-        inst = {}
-        for e in events:
-            if e[0] == _INSTANT and e[1] == "cache":
-                inst[e[2]] = inst.get(e[2], 0) + 1
-        if inst:
-            lines.append("  cache events: " + ", ".join(
-                f"{k}={v}" for k, v in sorted(inst.items())))
+        for cat, label in (("cache", "cache events"),
+                           ("fault", "fault events"),
+                           ("recovery", "recovery events")):
+            inst = {}
+            for e in events:
+                if e[0] == _INSTANT and e[1] == cat:
+                    inst[e[2]] = inst.get(e[2], 0) + 1
+            if inst:
+                lines.append(f"  {label}: " + ", ".join(
+                    f"{k}={v}" for k, v in sorted(inst.items())))
         return "\n".join(lines)
 
     def overlap_efficiency(self) -> Optional[float]:

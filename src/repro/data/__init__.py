@@ -1,13 +1,14 @@
 """Data substrate: synthetic SVM datasets, LIBSVM sparse format, LM tokens."""
 from repro.data.synthetic import (make_blobs, make_checker, make_two_spirals,
                                   make_multiclass, train_test_split)
-from repro.data.libsvm_format import (CSRData, count_libsvm_rows, read_libsvm,
+from repro.data.libsvm_format import (BadRowError, CSRData, IngestStats,
+                                      count_libsvm_rows, read_libsvm,
                                       read_libsvm_blocks, write_libsvm)
 from repro.data.lm_data import TokenStream, synthetic_token_batches
 
 __all__ = [
     "make_blobs", "make_checker", "make_two_spirals", "make_multiclass",
-    "train_test_split", "CSRData", "count_libsvm_rows", "read_libsvm",
-    "read_libsvm_blocks", "write_libsvm",
+    "train_test_split", "BadRowError", "CSRData", "IngestStats",
+    "count_libsvm_rows", "read_libsvm", "read_libsvm_blocks", "write_libsvm",
     "TokenStream", "synthetic_token_batches",
 ]

@@ -78,34 +78,96 @@ class CSRData:
             yield self.densify(s, e), self.labels[s:e]
 
 
-def _parse_line(line: str, labels, indices, values) -> Tuple[bool, int]:
+class BadRowError(ValueError):
+    """A malformed or non-finite LIBSVM line under ``on_bad_row="raise"``."""
+
+
+@dataclasses.dataclass
+class IngestStats:
+    """Row accounting for validated ingest (filled in place when passed to a
+    reader): streamed training jobs surface how much input was dropped instead
+    of silently folding NaN rows into G."""
+
+    rows_read: int = 0
+    rows_skipped: int = 0
+
+
+# _parse_line outcome codes
+_BLANK, _DATA, _SKIPPED = 0, 1, 2
+
+
+def _parse_line(line: str, lineno: int, labels, indices, values,
+                on_bad_row: str = "raise") -> Tuple[int, int]:
     """Parse one `label idx:val ...` line into the accumulators; returns
-    (is_data_line, max feature index seen + 1)."""
+    (outcome code, max feature index seen + 1).
+
+    Validation guards the streamed ingest paths: malformed tokens, 0-based
+    indices, and non-finite labels/values either raise `BadRowError`
+    (``on_bad_row="raise"``, default) or drop the ROW atomically
+    (``"skip"`` — partially-parsed values are rolled back so a bad tail
+    never leaves a half-row in the CSR accumulators).
+    """
     line = line.strip()
     if not line or line.startswith("#"):
-        return False, 0
+        return _BLANK, 0
+    n0 = len(indices)
     parts = line.split()
-    labels.append(float(parts[0]))
-    hi = 0
-    for tok in parts[1:]:
-        i, v = tok.split(":")
-        idx = int(i) - 1
-        hi = max(hi, idx + 1)
-        indices.append(idx)
-        values.append(float(v))
-    return True, hi
+    try:
+        lab = float(parts[0])
+        if not np.isfinite(lab):
+            raise ValueError(f"non-finite label {parts[0]!r}")
+        hi = 0
+        for tok in parts[1:]:
+            i, sep, v = tok.partition(":")
+            if not sep:
+                raise ValueError(f"malformed token {tok!r} (expected idx:val)")
+            idx = int(i) - 1
+            if idx < 0:
+                raise ValueError(f"feature index {i!r} is not 1-based")
+            val = float(v)
+            if not np.isfinite(val):
+                raise ValueError(f"non-finite value in token {tok!r}")
+            hi = max(hi, idx + 1)
+            indices.append(idx)
+            values.append(val)
+    except ValueError as exc:
+        del indices[n0:], values[n0:]   # atomic row rollback
+        if on_bad_row == "skip":
+            return _SKIPPED, 0
+        raise BadRowError(f"line {lineno}: {exc}") from None
+    labels.append(lab)
+    return _DATA, hi
 
 
-def read_libsvm(path: str, n_features: Optional[int] = None) -> CSRData:
-    """Parse `label idx:val idx:val ...` lines (1-based indices)."""
+def _check_bad_row_mode(on_bad_row: str) -> None:
+    if on_bad_row not in ("raise", "skip"):
+        raise ValueError(f"on_bad_row must be 'raise' or 'skip', "
+                         f"got {on_bad_row!r}")
+
+
+def read_libsvm(path: str, n_features: Optional[int] = None,
+                on_bad_row: str = "raise",
+                stats: Optional[IngestStats] = None) -> CSRData:
+    """Parse `label idx:val idx:val ...` lines (1-based indices).
+
+    ``on_bad_row``: "raise" (default) raises `BadRowError` naming the line;
+    "skip" drops bad rows and counts them in ``stats.rows_skipped`` (pass an
+    `IngestStats` to read the counter back).
+    """
+    _check_bad_row_mode(on_bad_row)
+    st = stats if stats is not None else IngestStats()
     labels, indptr, indices, values = [], [0], [], []
     max_idx = 0
     with open(path, "r") as f:
-        for line in f:
-            is_data, hi = _parse_line(line, labels, indices, values)
-            if is_data:
+        for lineno, line in enumerate(f, 1):
+            out, hi = _parse_line(line, lineno, labels, indices, values,
+                                  on_bad_row)
+            if out == _DATA:
+                st.rows_read += 1
                 max_idx = max(max_idx, hi)
                 indptr.append(len(indices))
+            elif out == _SKIPPED:
+                st.rows_skipped += 1
     nf = n_features if n_features is not None else max_idx
     return CSRData(
         indptr=np.asarray(indptr, np.int64),
@@ -116,16 +178,23 @@ def read_libsvm(path: str, n_features: Optional[int] = None) -> CSRData:
     )
 
 
-def read_libsvm_blocks(path: str, rows: int,
-                       n_features: int) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+def read_libsvm_blocks(path: str, rows: int, n_features: int,
+                       on_bad_row: str = "raise",
+                       stats: Optional[IngestStats] = None,
+                       ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
     """Stream a LIBSVM file as (dense rows, labels) blocks of ``rows`` rows.
 
     Nothing global is ever built — datasets larger than host RAM stream
     through stage 1 directly.  ``n_features`` must be given (the global
-    maximum index is unknown until EOF in a single pass).
+    maximum index is unknown until EOF in a single pass).  Validation is the
+    same as `read_libsvm`: with ``on_bad_row="skip"`` a bad line shrinks the
+    block instead of poisoning G with NaN rows, and ``stats.rows_skipped``
+    keeps the count.
     """
     if rows < 1:
         raise ValueError("rows must be positive")
+    _check_bad_row_mode(on_bad_row)
+    st = stats if stats is not None else IngestStats()
 
     def emit(labels, indptr, indices, values):
         dense = _scatter_dense(len(labels), n_features,
@@ -136,10 +205,14 @@ def read_libsvm_blocks(path: str, rows: int,
 
     labels, indptr, indices, values = [], [0], [], []
     with open(path, "r") as f:
-        for line in f:
-            is_data, _ = _parse_line(line, labels, indices, values)
-            if is_data:
+        for lineno, line in enumerate(f, 1):
+            out, _ = _parse_line(line, lineno, labels, indices, values,
+                                 on_bad_row)
+            if out == _DATA:
+                st.rows_read += 1
                 indptr.append(len(indices))
+            elif out == _SKIPPED:
+                st.rows_skipped += 1
             if len(labels) == rows:
                 yield emit(labels, indptr, indices, values)
                 labels, indptr, indices, values = [], [0], [], []

@@ -79,11 +79,16 @@ def train_from_libsvm(args, stream_config):
     matrix is never materialised; training rows are scored from G."""
     from repro.core import KernelParams, LPDSVM, StreamConfig
     from repro.core.streaming import compute_factor_streamed_csr
-    from repro.data import read_libsvm
+    from repro.data import IngestStats, read_libsvm
 
     t0 = time.time()
-    data = read_libsvm(args.libsvm, n_features=args.n_features or None)
+    ingest = IngestStats()
+    data = read_libsvm(args.libsvm, n_features=args.n_features or None,
+                       on_bad_row=args.on_bad_row, stats=ingest)
     t_read = time.time() - t0
+    if ingest.rows_skipped:
+        print(f"libsvm: skipped {ingest.rows_skipped} bad row(s) "
+              f"(--on-bad-row skip)")
     if args.gamma is None:
         # densify only a row subsample for the heuristic (median_gamma's own
         # sampler never sees the CSR rows it was not handed)
@@ -251,6 +256,23 @@ def main():
                          "features (end-to-end out-of-core path)")
     ap.add_argument("--n-features", type=int, default=0,
                     help="feature count for --libsvm (0 = infer from file)")
+    ap.add_argument("--on-bad-row", choices=("raise", "skip"),
+                    default="raise",
+                    help="--libsvm ingest policy for malformed / non-finite "
+                         "rows: 'raise' (default) aborts naming the line, "
+                         "'skip' drops them and reports the count")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="fault-tolerance state directory (core/resilience.py)"
+                         ": stage 1 streams G into a resumable memmap there, "
+                         "stage 2 snapshots full solver state at epoch "
+                         "boundaries; forces the streamed pipelines")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="snapshot stage 2 every N full passes (default 1; "
+                         "needs --checkpoint-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest snapshot in "
+                         "--checkpoint-dir; bit-equal to the uninterrupted "
+                         "run when killed at an epoch boundary")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record the run's pipeline timeline (core/trace.py) "
                          "and export it as Chrome-trace JSON loadable in "
@@ -274,6 +296,10 @@ def main():
         ap.error(f"--grid-folds must be >= 2, got {args.grid_folds}")
     if args.grid_gammas is not None and args.grid_cs is None:
         ap.error("--grid-gammas requires --grid-cs")
+    if args.checkpoint_every < 0:
+        ap.error(f"--checkpoint-every must be >= 0, got {args.checkpoint_every}")
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
 
     stream_config = None
     # An explicit chunk/tile size or wire dtype with no budget is a request
@@ -282,12 +308,15 @@ def main():
     if args.quant_group_rows < 0:
         ap.error(f"--quant-group-rows must be >= 0, got {args.quant_group_rows}")
     quant = args.block_dtype != "f32" or args.stage1_dtype != "f32"
-    force = args.stream or ((args.chunk_rows > 0 or args.tile_rows > 0
-                             or quant) and args.device_budget_mb <= 0)
+    # Checkpoints only exist on the streamed paths, so --checkpoint-dir is a
+    # request to stream (like an explicit chunk/tile size with no budget).
+    force = args.stream or bool(args.checkpoint_dir) \
+        or ((args.chunk_rows > 0 or args.tile_rows > 0
+             or quant) and args.device_budget_mb <= 0)
     cache_off = args.no_cache or args.cache_budget_mb == 0
     if (args.device_budget_mb > 0 or args.chunk_rows > 0
             or args.tile_rows > 0 or args.stream or quant or args.no_overlap
-            or cache_off or args.cache_budget_mb > 0):
+            or cache_off or args.cache_budget_mb > 0 or args.checkpoint_dir):
         from repro.core import StreamConfig
         stream_config = StreamConfig(
             device_budget_bytes=int(args.device_budget_mb * 2**20) or 2 << 30,
@@ -299,7 +328,15 @@ def main():
             overlap_devices=not args.no_overlap,
             cache_blocks=not cache_off,
             cache_budget_bytes=(int(args.cache_budget_mb * 2**20)
-                                if args.cache_budget_mb > 0 else None))
+                                if args.cache_budget_mb > 0 else None),
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=(args.checkpoint_every
+                              if args.checkpoint_dir else 0),
+            resume=args.resume)
+        if args.checkpoint_dir:
+            print(f"checkpoint: {args.checkpoint_dir} (every "
+                  f"{args.checkpoint_every} full passes"
+                  f"{', resuming' if args.resume else ''})")
 
     # Observability (core/trace.py): any of the three flags arms a tracer.
     # It is installed process-wide — every instrumented hot path resolves it

@@ -1,0 +1,512 @@
+"""Chaos suite for the fault-tolerance layer (core/resilience.py +
+core/faults.py).
+
+Every fault here is DETERMINISTIC — injected at a named site (reader block k,
+device d's H2D at epoch e, the driver's epoch boundary) via `core.faults`,
+never on a timer; stalls park on an Event the test releases.  The invariants
+under test are the strong ones from the streaming stack:
+
+  * kill at ANY epoch boundary + `resume` is BIT-equal to the uninterrupted
+    run (monolithic streamed, int8 wire, C-ladder grid farm, multi-device);
+  * a persistent device loss degrades the farm onto the survivors and
+    converges to the SAME model as a clean run at the surviving device
+    count, with per-pass G bytes unchanged (shared-reader invariant);
+  * disabled resilience (no checkpoint dir, fail_fast default) is a no-op:
+    zero snapshot calls, bit-identical outputs and byte counters.
+
+Multi-device cases run in subprocesses (XLA_FLAGS must precede jax import,
+same as tests/test_multidevice.py).
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (KernelParams, SolverConfig, StreamConfig,
+                        build_cv_grid_tasks, build_ovo_tasks, compute_factor,
+                        kfold_masks, solve_batch_streamed)
+from repro.core import faults as F
+from repro.core.resilience import WatchdogTimeout, WorkerStuckError
+from repro.core.trace import Tracer
+from repro.data import (BadRowError, IngestStats, make_multiclass,
+                        read_libsvm, read_libsvm_blocks, write_libsvm)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_sub(code: str, n_dev: int = 4, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_plan():
+    yield
+    F.uninstall()
+
+
+def _problem(n=300, classes=3, seed=1, budget=48, C=1.0):
+    x, y = make_multiclass(n=n, n_classes=classes, seed=seed)
+    _, labels = np.unique(y, return_inverse=True)
+    fac = compute_factor(np.asarray(x, np.float32),
+                         KernelParams("rbf", gamma=0.25), budget,
+                         key=jax.random.PRNGKey(0))
+    G = np.asarray(fac.G)
+    tasks, _ = build_ovo_tasks(labels, classes, C)
+    return G, tasks, labels
+
+
+def _assert_same_result(a, b):
+    np.testing.assert_array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+    np.testing.assert_array_equal(np.asarray(a.epochs), np.asarray(b.epochs))
+    np.testing.assert_array_equal(np.asarray(a.violation),
+                                  np.asarray(b.violation))
+
+
+def _kill_resume_roundtrip(G, tasks, cfg, base_sc, tmp_path, kill_epoch=2,
+                           chain=None):
+    """Clean run vs (kill at epoch boundary -> resume); returns both."""
+    clean, st_clean = solve_batch_streamed(
+        G, tasks, cfg, stream_config=base_sc, return_stats=True,
+        chain_next=chain)
+    d = str(tmp_path / "ckpt")
+    sc = dataclasses_replace(base_sc, checkpoint_dir=d, checkpoint_every=1)
+    F.install(F.FaultPlan().add("epoch_boundary", kind="kill",
+                                epoch=kill_epoch))
+    try:
+        with pytest.raises(F.SimulatedKill):
+            solve_batch_streamed(G, tasks, cfg, stream_config=sc,
+                                 chain_next=chain)
+    finally:
+        F.uninstall()
+    assert any(f.startswith("step_") for f in os.listdir(d))
+    sc2 = dataclasses_replace(sc, resume=True)
+    res, st = solve_batch_streamed(G, tasks, cfg, stream_config=sc2,
+                                   return_stats=True, chain_next=chain)
+    return clean, st_clean, res, st
+
+
+def dataclasses_replace(cfg, **kw):
+    import dataclasses
+    return dataclasses.replace(cfg, **kw)
+
+
+# --------------------------------------------------------------------------
+# kill / resume bit-parity
+# --------------------------------------------------------------------------
+
+def test_kill_resume_bit_parity_streamed(tmp_path):
+    G, tasks, _ = _problem()
+    cfg = SolverConfig(tol=1e-3, max_epochs=40)
+    clean, st_clean, res, st = _kill_resume_roundtrip(
+        G, tasks, cfg, StreamConfig(tile_rows=64), tmp_path)
+    _assert_same_result(clean, res)
+    # stats stitch across the kill: counters are for COMPLETED passes only
+    assert st.epochs == st_clean.epochs
+    assert st.full_passes == st_clean.full_passes
+    assert st.epoch_bytes == st_clean.epoch_bytes
+
+
+def test_kill_resume_bit_parity_int8(tmp_path):
+    G, tasks, _ = _problem(seed=2)
+    cfg = SolverConfig(tol=1e-3, max_epochs=40)
+    clean, _, res, _ = _kill_resume_roundtrip(
+        G, tasks, cfg, StreamConfig(tile_rows=64, block_dtype="int8"),
+        tmp_path, kill_epoch=3)
+    _assert_same_result(clean, res)
+
+
+def test_kill_resume_bit_parity_ladder_farm(tmp_path):
+    """The CV-grid C-ladder farm: dormant successors, pending w0-init passes,
+    and warm-start seeding all live INSIDE the snapshot."""
+    x, y = make_multiclass(n=240, n_classes=3, seed=1)
+    _, labels = np.unique(y, return_inverse=True)
+    fac = compute_factor(np.asarray(x, np.float32),
+                         KernelParams("rbf", gamma=0.25), 48,
+                         key=jax.random.PRNGKey(0))
+    G = np.asarray(fac.G)
+    masks = kfold_masks(len(labels), 2)
+    gtasks, _, chain = build_cv_grid_tasks(labels, 3, [0.5, 2.0], masks,
+                                           ladder=True)
+    cfg = SolverConfig(tol=1e-3, max_epochs=30 * 2 + 2)
+    clean, _, res, _ = _kill_resume_roundtrip(
+        G, gtasks, cfg, StreamConfig(tile_rows=64), tmp_path, kill_epoch=4,
+        chain=chain)
+    _assert_same_result(clean, res)
+
+
+def test_kill_resume_multidevice_farm(tmp_path):
+    run_sub(r"""
+import dataclasses, os, numpy as np, jax
+from repro.core import (KernelParams, SolverConfig, StreamConfig,
+                        build_ovo_tasks, compute_factor, solve_tasks_streamed)
+from repro.core import faults as F
+from repro.data import make_multiclass
+
+x, y = make_multiclass(n=400, n_classes=4, seed=2)
+_, labels = np.unique(y, return_inverse=True)
+fac = compute_factor(np.asarray(x, np.float32),
+                     KernelParams("rbf", gamma=0.25), 48,
+                     key=jax.random.PRNGKey(0))
+G = np.asarray(fac.G)
+tasks, _ = build_ovo_tasks(labels, 4, 1.0)
+cfg = SolverConfig(tol=1e-3, max_epochs=30)
+devs = jax.devices()
+assert len(devs) == 4
+
+sc = StreamConfig(tile_rows=64)
+clean, st0 = solve_tasks_streamed(G, tasks, cfg, devices=devs,
+                                  stream_config=sc, return_stats=True)
+d = %r
+sck = dataclasses.replace(sc, checkpoint_dir=d, checkpoint_every=1)
+F.install(F.FaultPlan().add("epoch_boundary", kind="kill", epoch=2))
+try:
+    solve_tasks_streamed(G, tasks, cfg, devices=devs, stream_config=sck)
+    raise SystemExit("kill did not fire")
+except F.SimulatedKill:
+    pass
+finally:
+    F.uninstall()
+assert any(f.startswith("step_") for f in os.listdir(d))
+scr = dataclasses.replace(sck, resume=True)
+res, st = solve_tasks_streamed(G, tasks, cfg, devices=devs,
+                               stream_config=scr, return_stats=True)
+np.testing.assert_array_equal(np.asarray(clean.alpha), np.asarray(res.alpha))
+np.testing.assert_array_equal(np.asarray(clean.w), np.asarray(res.w))
+np.testing.assert_array_equal(np.asarray(clean.epochs), np.asarray(res.epochs))
+assert st.epochs == st0.epochs and st.epoch_bytes == st0.epoch_bytes
+print("FARM-RESUME-OK")
+""" % str(tmp_path / "ckpt"))
+
+
+# --------------------------------------------------------------------------
+# graceful degradation
+# --------------------------------------------------------------------------
+
+def test_transient_h2d_retry_is_bit_exact():
+    G, tasks, _ = _problem(n=240, seed=3)
+    cfg = SolverConfig(tol=1e-3, max_epochs=25)
+    clean = solve_batch_streamed(G, tasks, cfg,
+                                 stream_config=StreamConfig(tile_rows=64))
+    tr = Tracer()
+    sc = StreamConfig(tile_rows=64, fail_fast=False, max_retries=3,
+                      retry_backoff=0.0, trace=tr)
+    plan = F.install(F.FaultPlan().add("h2d", kind="transient", times=2,
+                                       device="dev0", epoch=1))
+    try:
+        res = solve_batch_streamed(G, tasks, cfg, stream_config=sc)
+    finally:
+        F.uninstall()
+    assert len(plan.fired) == 2   # both injected failures were consumed
+    _assert_same_result(clean, res)
+    inst = [e[2] for e in tr.events()
+            if e[0] == "i" and e[1] in ("fault", "recovery")]
+    assert inst.count("h2d_retry") == 2
+    assert "h2d_retry_ok" in inst
+
+
+def test_transient_fault_with_fail_fast_raises():
+    G, tasks, _ = _problem(n=240, seed=3)
+    cfg = SolverConfig(tol=1e-3, max_epochs=25)
+    F.install(F.FaultPlan().add("h2d", kind="transient", device="dev0",
+                                epoch=1))
+    try:
+        with pytest.raises(F.TransientH2DError):
+            solve_batch_streamed(G, tasks, cfg,
+                                 stream_config=StreamConfig(tile_rows=64))
+    finally:
+        F.uninstall()
+
+
+def test_device_loss_degrades_to_clean_survivor_run(tmp_path):
+    """Persistent loss of one of 4 devices: the farm re-shards onto the 3
+    survivors from the last epoch-boundary snapshot and converges to the
+    SAME model as a clean 3-device run — and the shared-reader per-pass
+    `bytes_h2d` stays device-count invariant through the change."""
+    run_sub(r"""
+import numpy as np, jax
+from repro.core import (KernelParams, SolverConfig, StreamConfig,
+                        build_ovo_tasks, compute_factor, solve_tasks_streamed)
+from repro.core import faults as F
+from repro.data import make_multiclass
+
+x, y = make_multiclass(n=400, n_classes=4, seed=2)
+_, labels = np.unique(y, return_inverse=True)
+fac = compute_factor(np.asarray(x, np.float32),
+                     KernelParams("rbf", gamma=0.25), 48,
+                     key=jax.random.PRNGKey(0))
+G = np.asarray(fac.G)
+tasks, _ = build_ovo_tasks(labels, 4, 1.0)
+cfg = SolverConfig(tol=1e-3, max_epochs=30)
+devs = jax.devices()
+
+clean, st_clean = solve_tasks_streamed(
+    G, tasks, cfg, devices=devs[:3],
+    stream_config=StreamConfig(tile_rows=64), return_stats=True)
+
+sc = StreamConfig(tile_rows=64, fail_fast=False)
+F.install(F.FaultPlan().add("h2d", kind="persistent", device="dev3",
+                            epoch=1))
+try:
+    res, st = solve_tasks_streamed(G, tasks, cfg, devices=devs,
+                                   stream_config=sc, return_stats=True)
+finally:
+    F.uninstall()
+np.testing.assert_array_equal(np.asarray(clean.alpha), np.asarray(res.alpha))
+np.testing.assert_array_equal(np.asarray(clean.w), np.asarray(res.w))
+np.testing.assert_array_equal(np.asarray(clean.epochs), np.asarray(res.epochs))
+# byte accounting: every completed pass costs ONE G stream, before and
+# after the device count changed mid-run
+assert st.epoch_bytes == st_clean.epoch_bytes, (st.epoch_bytes,
+                                                st_clean.epoch_bytes)
+assert st.n_devices == 3
+print("QUARANTINE-OK")
+""")
+
+
+def test_watchdog_raises_diagnostics_instead_of_hanging():
+    from repro.core.distributed import _DeviceWorkers
+
+    class E:   # engines are only identity keys for the worker queues
+        pass
+
+    engines = [E(), E()]
+    gate = threading.Event()
+    w = _DeviceWorkers(engines, depth=2, names=["dev0", "dev1"],
+                       watchdog=0.25, join_timeout=5.0)
+    try:
+        w.submit(engines[0], gate.wait)   # dev0 starves the barrier
+        w.submit(engines[1], lambda: None)
+        with pytest.raises(WatchdogTimeout) as ei:
+            w.barrier()
+        assert "dev0" in str(ei.value)    # the diagnostic names the culprit
+    finally:
+        gate.set()
+        w.close()
+
+
+def test_close_reports_stuck_worker_threads():
+    from repro.core.distributed import _DeviceWorkers
+
+    class E:
+        pass
+
+    # raise path: a stuck worker is an error on the clean-exit close...
+    gate = threading.Event()
+    e = E()
+    w = _DeviceWorkers([e], depth=2, names=["dev0"], join_timeout=0.1)
+    try:
+        w.submit(e, gate.wait)
+        with pytest.raises(WorkerStuckError):
+            w.close()
+    finally:
+        gate.set()
+    # ...and a warning (never a masking raise) when closing during unwind
+    gate2 = threading.Event()
+    e2 = E()
+    w2 = _DeviceWorkers([e2], depth=2, names=["dev0"], join_timeout=0.1)
+    try:
+        w2.submit(e2, gate2.wait)
+        with pytest.warns(RuntimeWarning):
+            w2.close(suppress=True)
+    finally:
+        gate2.set()
+
+
+# --------------------------------------------------------------------------
+# stage 1 resume
+# --------------------------------------------------------------------------
+
+def test_stage1_chunk_resume(tmp_path):
+    from repro.core.streaming import compute_factor_streamed
+
+    x, _ = make_multiclass(n=300, n_classes=3, seed=1)
+    x = np.asarray(x, np.float32)
+    kp = KernelParams("rbf", gamma=0.25)
+    key = jax.random.PRNGKey(0)
+    clean = compute_factor_streamed(x, kp, 48, key=key,
+                                    config=StreamConfig(chunk_rows=64))
+    d = str(tmp_path / "s1")
+    sc = StreamConfig(chunk_rows=64, checkpoint_dir=d)
+    F.install(F.FaultPlan().add("stage1", kind="io", chunk=2))
+    try:
+        with pytest.raises(OSError):
+            compute_factor_streamed(x, kp, 48, key=key, config=sc)
+    finally:
+        F.uninstall()
+    assert os.path.exists(os.path.join(d, "stage1_G.npy"))
+    scr = StreamConfig(chunk_rows=64, checkpoint_dir=d, resume=True)
+    fac = compute_factor_streamed(x, kp, 48, key=key, config=scr)
+    assert fac.stage1_stats.chunks_skipped >= 1
+    assert fac.stage1_stats.rows_resumed >= 64
+    np.testing.assert_array_equal(np.asarray(clean.G), np.asarray(fac.G))
+
+
+# --------------------------------------------------------------------------
+# ingest validation
+# --------------------------------------------------------------------------
+
+def test_ingest_raises_on_bad_rows(tmp_path):
+    p = str(tmp_path / "bad.svm")
+    with open(p, "w") as f:
+        f.write("1 1:0.5 2:0.5\n")
+        f.write("-1 1:nan 2:0.5\n")
+    with pytest.raises(BadRowError, match="line 2"):
+        read_libsvm(p)
+    with open(p, "w") as f:
+        f.write("1 1:0.5 garbage\n")
+    with pytest.raises(BadRowError, match="malformed"):
+        read_libsvm(p)
+    with open(p, "w") as f:
+        f.write("1 0:0.5\n")   # 0-based index
+    with pytest.raises(BadRowError, match="1-based"):
+        read_libsvm(p)
+
+
+def test_ingest_skip_drops_rows_atomically(tmp_path):
+    p = str(tmp_path / "mixed.svm")
+    with open(p, "w") as f:
+        f.write("1 1:0.5 2:0.25\n")
+        f.write("-1 1:0.1 2:inf 3:0.9\n")   # bad VALUE after good tokens
+        f.write("nan 1:0.1\n")              # bad label
+        f.write("# comment\n")
+        f.write("-1 3:0.75\n")
+    st = IngestStats()
+    data = read_libsvm(p, on_bad_row="skip", stats=st)
+    assert st.rows_read == 2 and st.rows_skipped == 2
+    assert data.n == 2
+    np.testing.assert_array_equal(data.labels, [1.0, -1.0])
+    # the half-parsed bad row left NOTHING behind (atomic rollback)
+    assert len(data.values) == 3
+    # the block reader agrees, block boundaries included
+    st2 = IngestStats()
+    blocks = list(read_libsvm_blocks(p, rows=1, n_features=3,
+                                     on_bad_row="skip", stats=st2))
+    assert st2.rows_skipped == 2
+    dense = np.concatenate([b for b, _ in blocks])
+    np.testing.assert_array_equal(dense, data.densify())
+
+
+# --------------------------------------------------------------------------
+# failed runs still export a valid trace, with no leaked threads
+# --------------------------------------------------------------------------
+
+def test_failed_run_exports_valid_trace(tmp_path):
+    G, tasks, _ = _problem(n=240, seed=4)
+    cfg = SolverConfig(tol=1e-3, max_epochs=25)
+    tr = Tracer()
+    n_threads = threading.active_count()
+    F.install(F.FaultPlan().add("reader", kind="io", block=1))
+    try:
+        with pytest.raises(OSError):
+            solve_batch_streamed(G, tasks, cfg,
+                                 stream_config=StreamConfig(tile_rows=64,
+                                                            trace=tr))
+    finally:
+        F.uninstall()
+    deadline = time.monotonic() + 10
+    while threading.active_count() > n_threads and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() <= n_threads   # no leaked workers
+    out = str(tmp_path / "failed.json")
+    tr.export(out)
+    with open(out) as f:
+        events = json.load(f)["traceEvents"]       # valid JSON end to end
+    # the in-flight read span was CLOSED with the error recorded on it
+    errs = [e for e in events
+            if e.get("name") == "stage_block"
+            and e.get("args", {}).get("error")]
+    assert errs and errs[-1]["args"]["error"] == "InjectedIOError"
+    assert any(e.get("cat") == "fault" for e in events)
+
+
+# --------------------------------------------------------------------------
+# zero overhead when disabled
+# --------------------------------------------------------------------------
+
+def test_disabled_resilience_is_bit_identical_no_snapshots(tmp_path,
+                                                           monkeypatch):
+    import repro.core.resilience as R
+
+    calls = {"n": 0}
+    orig = R.snapshot_engines
+
+    def spy(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(R, "snapshot_engines", spy)
+    G, tasks, _ = _problem(n=240, seed=5)
+    cfg = SolverConfig(tol=1e-3, max_epochs=25)
+    base, st_base = solve_batch_streamed(
+        G, tasks, cfg, stream_config=StreamConfig(tile_rows=64),
+        return_stats=True)
+    assert calls["n"] == 0                       # default path: no guard work
+    # checkpoint machinery armed but checkpoint_every=0: still zero snapshots
+    # and bit-identical outputs AND byte counters
+    sc = StreamConfig(tile_rows=64, checkpoint_dir=str(tmp_path / "z"),
+                      checkpoint_every=0)
+    res, st = solve_batch_streamed(G, tasks, cfg, stream_config=sc,
+                                   return_stats=True)
+    assert calls["n"] == 0
+    _assert_same_result(base, res)
+    for f in ("bytes_h2d", "bytes_d2h", "bytes_g", "blocks_streamed",
+              "rows_streamed", "epochs", "full_passes"):
+        assert getattr(st, f) == getattr(st_base, f), f
+    assert st.epoch_bytes == st_base.epoch_bytes
+    # spy sanity: snapshots DO happen once checkpoint_every is set
+    sc1 = StreamConfig(tile_rows=64, checkpoint_dir=str(tmp_path / "z1"),
+                       checkpoint_every=1)
+    solve_batch_streamed(G, tasks, cfg, stream_config=sc1)
+    assert calls["n"] >= 1
+
+
+# --------------------------------------------------------------------------
+# CLI: kill -9 between epochs, then --resume
+# --------------------------------------------------------------------------
+
+def test_cli_kill9_then_resume(tmp_path):
+    x, y = make_multiclass(n=1200, n_classes=5, seed=0)
+    data = str(tmp_path / "train.svm")
+    write_libsvm(data, np.asarray(x, np.float32), y)
+    ck = str(tmp_path / "ckpt")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    args = [sys.executable, "-m", "repro.launch.train_svm",
+            "--libsvm", data, "--budget", "48", "--gamma", "0.25",
+            "--chunk-rows", "256", "--tile-rows", "128",
+            "--checkpoint-dir", ck, "--checkpoint-every", "1"]
+    proc = subprocess.Popen(args, env=env, stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.monotonic() + 300
+        while time.monotonic() < deadline and proc.poll() is None:
+            if any(f.startswith("step_") for f in
+                   (os.listdir(ck) if os.path.isdir(ck) else [])):
+                proc.send_signal(signal.SIGKILL)   # the real thing
+                break
+            time.sleep(0.02)
+        proc.wait(timeout=300)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+    out = subprocess.run(args + ["--resume"], env=env, capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "resuming" in out.stdout
+    assert "train error" in out.stdout
