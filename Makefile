@@ -2,10 +2,10 @@
 #
 #   make test        tier-1 suite (the invocation ROADMAP.md pins)
 #   make test-mesh   multi-device suites under 4 forced host devices
-#   make bench       out-of-core + mesh-farm + polish + CV-grid curves ->
-#                    BENCH_streaming.json + BENCH_stage2_stream.json +
-#                    BENCH_stage2_mesh.json + BENCH_polish.json +
-#                    BENCH_cv_grid.json
+#   make bench       out-of-core + mesh-farm + polish + CV-grid + disk-tier
+#                    curves -> BENCH_streaming.json + BENCH_stage2_stream.json
+#                    + BENCH_stage2_mesh.json + BENCH_polish.json +
+#                    BENCH_cv_grid.json + BENCH_disk_stream.json
 #   make bench-smoke same suites at smoke sizes (fast CI loop) + the
 #                    observability smoke (trace coverage / no-op / overhead)
 #   make trace-smoke just the observability smoke -> /tmp/trace_smoke.json
@@ -25,13 +25,15 @@ test:
 
 # The subprocess helpers inside these files force their own child device
 # counts; the env var here additionally multi-devices the in-process parts.
+# test_shards.py rides along: the shard chaos suite (torn writes, bit-flips,
+# IO faults) includes 2-device farm parity from a shard-backed G.
 test-mesh:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 	$(PY) -m pytest -x -q tests/test_stage2_mesh.py tests/test_block_cache.py \
-	tests/test_resilience.py
+	tests/test_resilience.py tests/test_shards.py
 
 bench:
-	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish table3
+	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish table3 disk
 
 # smoke-sized records must not clobber the committed BENCH_*.json trajectory
 bench-smoke:
@@ -41,8 +43,9 @@ bench-smoke:
 	BENCH_STAGE2_MESH_JSON=/tmp/BENCH_stage2_mesh.smoke.json \
 	BENCH_POLISH_JSON=/tmp/BENCH_polish.smoke.json \
 	BENCH_CV_GRID_JSON=/tmp/BENCH_cv_grid.smoke.json \
+	BENCH_DISK_STREAM_JSON=/tmp/BENCH_disk_stream.smoke.json \
 	$(PY) -m benchmarks.run streaming stage2 stage2_mesh polish table3 \
-	trace_smoke
+	disk trace_smoke
 
 # streamed fit under a Tracer: asserts >=1 span per core pipeline category
 # in the exported Chrome-trace JSON, zero events on the disabled path, and

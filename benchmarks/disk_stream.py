@@ -1,0 +1,175 @@
+"""Disk tier: shard-store streaming vs text re-parse and RAM re-stream.
+
+Three questions the durable shard store (`core/shards.py`) has to answer
+with numbers:
+
+  * parse-once: how much does ingesting LIBSVM text into checksummed binary
+    shards cost up front, and how fast does every later epoch's pass get
+    when it re-reads shards instead of re-parsing text?
+  * wire cost: shard sweep throughput (payload GB/s) for the f32 store and
+    the int8-quantised store (4x fewer payload bytes for the same rows),
+    against an in-RAM re-stream of the same row blocks (the no-disk upper
+    bound).
+  * integrity tax: the same sweep with footer-digest verification on
+    (the default) and off — the overhead column of the acceptance
+    criteria.
+
+Records land in ``BENCH_disk_stream.json`` for the BENCH trajectory.
+
+    PYTHONPATH=src python -m benchmarks.run disk
+    BENCH_SMOKE=1 PYTHONPATH=src python -m benchmarks.run disk   # fast
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, provenance, timeit
+from repro.core import ShardStore, ShardStoreStats, open_or_ingest
+from repro.data import read_libsvm
+
+OUT_PATH = os.environ.get("BENCH_DISK_STREAM_JSON", "BENCH_disk_stream.json")
+SMOKE = bool(os.environ.get("BENCH_SMOKE"))
+
+# (rows, features); shard_rows sized so each config spans several shards
+SIZES = (((3_000, 48),) if SMOKE else ((20_000, 64), (60_000, 96)))
+SHARD_ROWS = 512 if SMOKE else 4_096
+DTYPES = ("f32", "int8")
+SWEEPS = 2 if SMOKE else 3          # epochs amortising the one-time ingest
+
+
+def _write_libsvm(path: str, x: np.ndarray, y: np.ndarray) -> None:
+    with open(path, "w") as f:
+        for row, lab in zip(x, y):
+            feats = " ".join(f"{j + 1}:{v:.6g}"
+                             for j, v in enumerate(row) if v)
+            f.write(f"{int(lab)} {feats}\n")
+
+
+def _sweep(store: ShardStore, chunk: int) -> int:
+    """Full pass over the store in chunk-row blocks; returns payload bytes."""
+    total = 0
+    for lo in range(0, store.n, chunk):
+        block = store.read_rows(lo, min(lo + chunk, store.n))
+        total += block.nbytes
+    return total
+
+
+def run() -> None:
+    records = []
+    workdir = tempfile.mkdtemp(prefix="bench_disk_")
+    try:
+        for n, p in SIZES:
+            rng = np.random.default_rng(3)
+            x = rng.standard_normal((n, p)).astype(np.float32)
+            y = rng.integers(0, 3, n)
+            text = os.path.join(workdir, f"data_{n}.svm")
+            _write_libsvm(text, x, y)
+            text_bytes = os.path.getsize(text)
+            chunk = SHARD_ROWS
+
+            # -- the baseline every epoch pays without the disk tier --------
+            t_parse = timeit(lambda: read_libsvm(text, n_features=p),
+                             repeats=1 if SMOKE else 3)
+            emit(f"disk_text_parse_n{n}", t_parse * 1e6,
+                 f"{text_bytes / t_parse / 2**30:.2f}GB/s text")
+            records.append({"mode": "text_parse", "n": n, "p": p,
+                            "dtype": "f32", "seconds": t_parse,
+                            "bytes": text_bytes,
+                            "gbps": text_bytes / t_parse / 2**30})
+
+            # -- the no-disk upper bound: re-stream host RAM ----------------
+            def ram_sweep():
+                for lo in range(0, n, chunk):
+                    np.ascontiguousarray(x[lo:lo + chunk])
+
+            t_ram = timeit(ram_sweep, repeats=1 if SMOKE else 3)
+            emit(f"disk_ram_restream_n{n}", t_ram * 1e6,
+                 f"{x.nbytes / t_ram / 2**30:.2f}GB/s RAM")
+            records.append({"mode": "ram_restream", "n": n, "p": p,
+                            "dtype": "f32", "seconds": t_ram,
+                            "bytes": x.nbytes,
+                            "gbps": x.nbytes / t_ram / 2**30})
+
+            for dtype in DTYPES:
+                d = os.path.join(workdir, f"store_{n}_{dtype}")
+                stats = ShardStoreStats()
+                t0 = time.perf_counter()
+                store, _ = open_or_ingest(text, d, n_features=p,
+                                          shard_rows=SHARD_ROWS, dtype=dtype,
+                                          stats=stats)
+                t_ingest = time.perf_counter() - t0
+                payload = sum(int(s["nbytes"])
+                              for s in store.manifest["shards"])
+                emit(f"disk_ingest_n{n}_{dtype}", t_ingest * 1e6,
+                     f"{store.n_shards} shards "
+                     f"{payload / 2**20:.1f}MiB on disk")
+                records.append({"mode": "ingest", "n": n, "p": p,
+                                "dtype": dtype, "seconds": t_ingest,
+                                "shards": store.n_shards,
+                                "bytes": payload, "shard_rows": SHARD_ROWS})
+
+                # verify on/off sweep: cache_shards=0 so every block is a
+                # real read+decode, not an LRU hit
+                t_by_verify = {}
+                for verify in (True, False):
+                    st = ShardStoreStats()
+                    rd = ShardStore(d, verify=verify, cache_shards=0,
+                                    stats=st)
+                    t_sweep = timeit(lambda: _sweep(rd, chunk),
+                                     repeats=1 if SMOKE else 3)
+                    t_by_verify[verify] = t_sweep
+                    disk_bytes = st.bytes_read / max(st.shards_read, 1) \
+                        * rd.n_shards
+                    tag = "verify" if verify else "noverify"
+                    emit(f"disk_shard_sweep_n{n}_{dtype}_{tag}",
+                         t_sweep * 1e6,
+                         f"{disk_bytes / t_sweep / 2**30:.2f}GB/s disk "
+                         f"{x.nbytes / t_sweep / 2**30:.2f}GB/s rows")
+                    records.append({"mode": "shard_sweep", "n": n, "p": p,
+                                    "dtype": dtype, "verify": verify,
+                                    "seconds": t_sweep,
+                                    "bytes": int(disk_bytes),
+                                    "rows_gbps": x.nbytes / t_sweep / 2**30,
+                                    "gbps": disk_bytes / t_sweep / 2**30})
+                overhead = t_by_verify[True] / max(t_by_verify[False], 1e-12)
+                emit(f"disk_verify_overhead_n{n}_{dtype}", 0.0,
+                     f"{overhead:.3f}x sweep time with checksums on")
+                records.append({"mode": "verify_overhead", "n": n, "p": p,
+                                "dtype": dtype, "ratio": overhead})
+
+                # parse-once amortisation over SWEEPS epochs
+                rd = ShardStore(d, cache_shards=0)
+                t_shard = timeit(lambda: _sweep(rd, chunk), repeats=1)
+                once = t_ingest + SWEEPS * t_shard
+                always = SWEEPS * t_parse
+                emit(f"disk_parse_once_n{n}_{dtype}", 0.0,
+                     f"{always / max(once, 1e-12):.2f}x faster over "
+                     f"{SWEEPS} epochs vs re-parsing text")
+                records.append({"mode": "parse_once", "n": n, "p": p,
+                                "dtype": dtype, "epochs": SWEEPS,
+                                "seconds_ingest_plus_sweeps": once,
+                                "seconds_reparse": always,
+                                "speedup": always / max(once, 1e-12)})
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    payload = {"benchmark": "disk_stream",
+               "backend": jax.default_backend(),
+               "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+               "provenance": provenance(),
+               "records": records}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {OUT_PATH} ({len(records)} records)", flush=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -11,9 +11,10 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (eigdrop, fig3_stages, kernel_micro, polish,
-                            shrinking, stage2_mesh, stage2_stream, streaming,
-                            table2_solvers, table3_cv_grid, trace_smoke)
+    from benchmarks import (disk_stream, eigdrop, fig3_stages, kernel_micro,
+                            polish, shrinking, stage2_mesh, stage2_stream,
+                            streaming, table2_solvers, table3_cv_grid,
+                            trace_smoke)
     suites = {
         "table2": table2_solvers.run,
         "table3": table3_cv_grid.run,
@@ -24,6 +25,7 @@ def main() -> None:
         "streaming": streaming.run,
         "stage2": stage2_stream.run,
         "stage2_mesh": stage2_mesh.run,
+        "disk": disk_stream.run,
         "polish": polish.run,
         "trace_smoke": trace_smoke.run,
     }

@@ -34,9 +34,14 @@ from repro.core.resilience import (Stage1Progress, StreamGuard,
                                    g_fingerprint, load_snapshot,
                                    restore_engines, snapshot_engines,
                                    validate_snapshot)
+from repro.core.shards import (GShardView, ShardCorruptionError, ShardError,
+                               ShardSpillSink, ShardStore, ShardStoreStats,
+                               ShardWriter, ingest_libsvm_shards,
+                               open_or_ingest)
 from repro.core.streaming import (Stage1StreamStats, StreamConfig,
                                   auto_chunk_rows, compute_factor_streamed,
                                   compute_factor_streamed_csr,
+                                  compute_factor_streamed_shards,
                                   default_gram_q8_fn, should_stream,
                                   stream_factor_blocks, stream_factor_rows)
 from repro.core.trace import (NULL, NullTracer, ProgressPrinter, Tracer,
@@ -68,8 +73,12 @@ __all__ = [
     "Stage1Progress", "StreamGuard", "WatchdogTimeout", "WorkerStuckError",
     "g_fingerprint", "load_snapshot", "restore_engines", "snapshot_engines",
     "validate_snapshot",
+    "GShardView", "ShardCorruptionError", "ShardError", "ShardSpillSink",
+    "ShardStore", "ShardStoreStats", "ShardWriter", "ingest_libsvm_shards",
+    "open_or_ingest",
     "Stage1StreamStats", "StreamConfig", "auto_chunk_rows",
     "compute_factor_streamed", "compute_factor_streamed_csr",
+    "compute_factor_streamed_shards",
     "default_gram_q8_fn", "should_stream", "stream_factor_blocks",
     "stream_factor_rows",
     "NULL", "NullTracer", "ProgressPrinter", "Tracer", "install", "uninstall",

@@ -265,14 +265,18 @@ def grid_search(
     for gi, gamma in enumerate(gammas):
         kp = KernelParams(kind=kernel_kind, gamma=float(gamma))
         # Each gamma is its own resumable unit: G and the solver state both
-        # depend on gamma, so checkpoints live in per-gamma subdirs (the
-        # snapshot's G fingerprint rejects any cross-gamma mixup anyway).
+        # depend on gamma, so checkpoints — and spilled-G shard stores,
+        # whose contents are a function of gamma — live in per-gamma
+        # subdirs (the snapshot's G fingerprint rejects any cross-gamma
+        # mixup anyway).
         g_cfg = stream_config
-        if getattr(stream_config, "checkpoint_dir", None):
+        ck = getattr(stream_config, "checkpoint_dir", None)
+        sd = getattr(stream_config, "shard_dir", None)
+        if ck or sd:
             g_cfg = dataclasses.replace(
                 stream_config,
-                checkpoint_dir=os.path.join(stream_config.checkpoint_dir,
-                                            f"gamma{gi}"))
+                checkpoint_dir=os.path.join(ck, f"gamma{gi}") if ck else None,
+                shard_dir=os.path.join(sd, f"gamma{gi}") if sd else None)
         t0 = tr.begin()
         factor = compute_factor(x, kp, budget,
                                 key=jax.random.PRNGKey(seed), gram_fn=gram_fn,
@@ -327,7 +331,7 @@ def grid_search(
             tasks, _ = build_cv_tasks(labels, n_classes, C, val_masks,
                                       warm=warm if warm_start else None)
             c_cfg = g_cfg
-            if g_cfg is not stream_config:   # checkpointing active: each C
+            if getattr(g_cfg, "checkpoint_dir", None):  # checkpointing: each C
                 c_cfg = dataclasses.replace(  # cell is its own resumable unit
                     g_cfg, checkpoint_dir=os.path.join(g_cfg.checkpoint_dir,
                                                        f"c{ci}"))

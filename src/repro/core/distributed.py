@@ -386,7 +386,10 @@ def solve_tasks_streamed(
                                     chain_next=chain_next,
                                     return_stats=return_stats)
 
-    G = np.asarray(G, np.float32)
+    if not getattr(G, "is_shard_view", False):
+        # Keep a shards.GShardView disk-resident — the shared reader slices
+        # row blocks from it like any ndarray.
+        G = np.asarray(G, np.float32)
     n, rank = G.shape
     idx = np.asarray(tasks.idx)
     y = np.asarray(tasks.y, np.float32)

@@ -17,6 +17,12 @@ Sites wired into the pipelines:
     "stage1"          stage-1 chunk stream, attrs: chunk
     "stall"           worker-queue stall (waits on a plan-held Event —
                       the test releases it; no sleeps)
+    "shard_write"     shard-store writer before a shard lands, attrs: shard
+    "shard_read"      shard-store reader before the file read, attrs: shard
+    "shard_corrupt"   same read point, attrs: shard, path — the "corrupt"
+                      kind flips one payload byte of the file IN PLACE and
+                      returns (no exception): the injected bit rot must be
+                      caught by the checksum, not by the injector
 
 The taxonomy below is ALSO the real one: `classify_error` is what the farm
 uses to decide between bounded retry (transient), device quarantine
@@ -25,6 +31,7 @@ uses to decide between bounded retry (transient), device quarantine
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 from typing import Dict, List, Optional
 
@@ -81,7 +88,9 @@ class FaultSpec:
 
     ``kind``: "transient" -> TransientH2DError, "persistent" ->
     DeviceLostError, "io" -> InjectedIOError, "kill" -> SimulatedKill,
-    "stall" -> block on the plan's Event until `FaultPlan.release`.
+    "stall" -> block on the plan's Event until `FaultPlan.release`,
+    "corrupt" -> flip one byte of the file named by the ``path`` attr in
+    place and return silently (simulated bit rot the checksum must catch).
     """
 
     site: str
@@ -131,6 +140,9 @@ class FaultPlan:
         if hit.kind == "stall":
             self._stall.wait()
             return
+        if hit.kind == "corrupt":
+            _flip_byte(str(attrs["path"]))
+            return
         where = f"{site} {attrs}"
         if hit.kind == "transient":
             raise TransientH2DError(f"injected transient fault at {where}")
@@ -141,6 +153,25 @@ class FaultPlan:
         if hit.kind == "kill":
             raise SimulatedKill(f"injected kill at {where}")
         raise ValueError(f"unknown fault kind {hit.kind!r}")
+
+
+def _flip_byte(path: str, offset: Optional[int] = None) -> None:
+    """Deterministic in-place bit rot: XOR one payload byte of ``path``.
+
+    The default offset lands mid-file (inside the payload for any real
+    shard), so header parsing still succeeds and ONLY the checksum can
+    notice — exactly the silent-corruption case the store must catch."""
+    size = os.path.getsize(path)
+    if size == 0:
+        return
+    pos = size // 2 if offset is None else offset % size
+    with open(path, "r+b") as f:
+        f.seek(pos)
+        b = f.read(1)
+        f.seek(pos)
+        f.write(bytes([b[0] ^ 0x01]))
+        f.flush()
+        os.fsync(f.fileno())
 
 
 _PLAN: Optional[FaultPlan] = None

@@ -162,6 +162,26 @@ def dequantize_rows(values: np.ndarray, scales: np.ndarray,
     return values.astype(np.float32) * s + z
 
 
+def dequantize_rows_range(values: np.ndarray, scales: np.ndarray,
+                          lo: int, hi: int,
+                          group: int = GROUP_ROWS) -> np.ndarray:
+    """Host dequantisation of only rows [lo, hi) of a quantised block.
+
+    Touches just the scale groups overlapping the range, so a partial read
+    of a large on-disk shard (`core/shards.py` with its decoded-shard cache
+    disabled) never pays for decoding the rows around it.  Identical values
+    to ``dequantize_rows(values, scales, group)[lo:hi]``.
+    """
+    lo = max(0, lo)
+    hi = min(values.shape[0], hi)
+    if hi <= lo:
+        return np.zeros((0, values.shape[1]), np.float32)
+    g0 = lo // group
+    sub = np.repeat(scales[g0:n_groups(hi, group)], group, axis=0)
+    s = sub[lo - g0 * group:lo - g0 * group + (hi - lo)]
+    return values[lo:hi].astype(np.float32) * s[:, 0:1] + s[:, 1:2]
+
+
 @partial(jax.jit, static_argnames=("group",))
 def dequant_rows(values: jnp.ndarray, scales: jnp.ndarray,
                  group: int = GROUP_ROWS) -> jnp.ndarray:

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import re
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -122,7 +123,16 @@ def apply_carry(stats, carry: Optional[Dict[str, np.ndarray]]):
 
 def g_fingerprint(G) -> float:
     """Cheap content stamp of the factor (guards resuming onto the wrong G,
-    e.g. another gamma's checkpoint directory)."""
+    e.g. another gamma's checkpoint directory).
+
+    A shard-backed G (`shards.GShardView`) publishes its own fingerprint,
+    derived from the store manifest's per-shard digests — so snapshots
+    record the shard-manifest identity and ``resume`` refuses to continue
+    against a store that was re-ingested or otherwise mutated, without
+    reading a single row back from disk."""
+    fp = getattr(G, "g_fingerprint", None)
+    if fp is not None:
+        return float(fp)
     n = G.shape[0]
     if n == 0:
         return 0.0
@@ -352,9 +362,27 @@ class StreamGuard:
             if trace is not None:
                 trace.instant("recovery", "checkpoint", epoch=epoch,
                               step=epoch + 1)
+            self._prune()
         if self.degrade:
             self.mem = snap if snap is not None else self._snapshot(
                 engines, reader, epoch + 1)
+
+    def _prune(self) -> None:
+        """Keep-last-k snapshot retention (``cfg.checkpoint_keep``, 0 = keep
+        everything).  Strictly delete-AFTER-write: pruning runs only once
+        the new snapshot has atomically landed, and deletes ascending from
+        the oldest — a crash mid-prune can never remove the newest good
+        snapshot, only leave extra old ones behind."""
+        keep = int(getattr(self.cfg, "checkpoint_keep", 0))
+        if keep <= 0 or not self.dir:
+            return
+        steps = sorted(int(m.group(1)) for f in os.listdir(self.dir)
+                       if (m := re.match(r"step_(\d+)\.msgpack$", f)))
+        for s in steps[:-keep]:
+            try:
+                os.remove(os.path.join(self.dir, f"step_{s:08d}.msgpack"))
+            except OSError:
+                pass
 
 
 # ---------------------------------------------------------------------------

@@ -1085,7 +1085,12 @@ class _Stage2Engine:
         """
         gscales = self._scale_cache.get("gscales")
         if gscales is None:
-            gscales = group_scales(self.G, self._group)
+            # A shard-backed G computes the table shard-by-shard on disk
+            # (same values: shard boundaries are group-aligned); a host
+            # ndarray takes the direct reduction.
+            gs_fn = getattr(self.G, "group_scales", None)
+            gscales = (gs_fn(self._group) if callable(gs_fn)
+                       else group_scales(self.G, self._group))
             self._scale_cache["gscales"] = gscales
         srow = gscales[union // self._group]              # (n_act, 2)
         vals = encode_rows(act_G, srow)
@@ -1451,7 +1456,11 @@ def solve_batch_streamed(
     cfg = stream_config or StreamConfig()
     if epoch_fn is None:
         epoch_fn = default_epoch_fn()
-    G = np.asarray(G, np.float32)
+    if not getattr(G, "is_shard_view", False):
+        # A shards.GShardView stays on disk: asarray would materialise the
+        # full (n, rank) factor and defeat the spill.  Its slice/gather
+        # surface feeds the reader below directly.
+        G = np.asarray(G, np.float32)
     n, rank = G.shape
     tile = auto_tile_rows(n, rank, tasks.n_tasks, cfg)
     eng = _Stage2Engine(G, tasks, config, cfg, epoch_fn=epoch_fn,

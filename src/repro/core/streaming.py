@@ -37,7 +37,8 @@ import numpy as np
 
 from repro.core.faults import check as _fault_check
 from repro.core.kernel_fn import KernelParams, gram
-from repro.core.quant import GROUP_ROWS, quantize_rows
+from repro.core.quant import (GROUP_ROWS, QuantBlock, dequantize_rows,
+                              quantize_rows)
 from repro.core.trace import resolve as resolve_tracer
 
 BYTES_F32 = 4
@@ -110,6 +111,21 @@ class StreamConfig:
     watchdog_seconds: float = 0.0        # farm-barrier starvation watchdog:
                                          # raise a queue/thread diagnostic
                                          # instead of hanging (0 = off)
+    checkpoint_keep: int = 3             # stage-2 snapshots retained on disk
+                                         # (keep-last-k, delete-after-write;
+                                         # 0 = keep every step_*.msgpack)
+    # -- disk tier (core/shards.py) ------------------------------------------
+    shard_dir: Optional[str] = None      # root of the checksummed shard
+                                         # store(s); None -> disk tier off
+    shard_rows: int = 4096               # rows per shard file (multiple of
+                                         # quant.GROUP_ROWS so int8 scale
+                                         # groups stay global-row-aligned)
+    spill_g: bool = False                # stream stage-1 G into f32 shards
+                                         # under shard_dir and read it back
+                                         # in stage 2 (host G never built)
+    verify_shards: bool = True           # recompute each shard's checksum on
+                                         # every disk read (False = trust
+                                         # the bytes; bench the difference)
 
     def __post_init__(self):
         if self.prefetch < 1:
@@ -138,6 +154,13 @@ class StreamConfig:
             raise ValueError("retry_backoff must be >= 0")
         if self.watchdog_seconds < 0:
             raise ValueError("watchdog_seconds must be >= 0")
+        if self.checkpoint_keep < 0:
+            raise ValueError("checkpoint_keep must be >= 0")
+        if self.shard_rows < 1 or self.shard_rows % GROUP_ROWS:
+            raise ValueError(f"shard_rows must be a positive multiple of "
+                             f"{GROUP_ROWS}, got {self.shard_rows}")
+        if self.spill_g and not self.shard_dir:
+            raise ValueError("spill_g=True requires shard_dir")
         if self.resume and not self.checkpoint_dir:
             raise ValueError("resume=True requires checkpoint_dir")
 
@@ -359,7 +382,17 @@ def stream_factor_blocks(
     tuned = not autotune_prefetch
     s = 0
     for i, xb in enumerate(blocks):
-        xb = np.asarray(xb, np.float32)
+        # Blocks may arrive PRE-ENCODED as `quant.QuantBlock`s (the int8
+        # shard store streams its stored codes straight onto the wire —
+        # zero re-encode, and bit-equal to the host int8 path because shard
+        # scale groups are global-row-aligned).  On the f32 wire they are
+        # decoded host-side first.
+        pre = isinstance(xb, QuantBlock)
+        if pre and not quant:
+            xb = dequantize_rows(xb.values, xb.scales, xb.group)
+            pre = False
+        if not pre:
+            xb = np.asarray(xb, np.float32)
         e = s + xb.shape[0]
         if e > n:
             raise ValueError(f"block iterator produced more than {n} rows")
@@ -374,15 +407,20 @@ def stream_factor_blocks(
         d = devices[i % len(devices)]
         lm, pr = resident[i % len(devices)]
         if quant:
-            t0 = tr.begin()
-            vals, scales = quantize_rows(xb, quant_group_rows, symmetric=True)
-            tr.end("encode", "stage1_quant", t0, rows=xb.shape[0],
-                   bytes=int(vals.nbytes + scales.nbytes))
+            if pre:
+                vals, scales, grp = xb.values, xb.scales, xb.group
+            else:
+                t0 = tr.begin()
+                vals, scales = quantize_rows(xb, quant_group_rows,
+                                             symmetric=True)
+                tr.end("encode", "stage1_quant", t0, rows=xb.shape[0],
+                       bytes=int(vals.nbytes + scales.nbytes))
+                grp = quant_group_rows
             st.bytes_scales += scales.nbytes
             bv, bs = put(vals, d), put(scales, d)
             t0 = tr.begin()
             gb = _chunk_features_q8(bv, bs, lm, pr,
-                                    params, quant_group_rows, gram_q8_fn)
+                                    params, grp, gram_q8_fn)
             tr.end("kernel", "stage1_chunk", t0, rows=e - s)
         else:
             bx = put(xb, d)
@@ -471,7 +509,8 @@ def compute_factor_streamed(
 
     return _streamed_factor_from_landmarks(
         landmarks, make_blocks, n, p, params, eig_rtol=eig_rtol,
-        config=config, gram_fn=gram_fn, devices=devices)
+        config=config, gram_fn=gram_fn, devices=devices,
+        row_provider=lambda s, e: x[s:e])
 
 
 def compute_factor_streamed_csr(
@@ -510,16 +549,105 @@ def compute_factor_streamed_csr(
 
     return _streamed_factor_from_landmarks(
         landmarks, make_blocks, n, p, params, eig_rtol=eig_rtol,
-        config=config, gram_fn=gram_fn, devices=devices)
+        config=config, gram_fn=gram_fn, devices=devices,
+        row_provider=lambda s, e: data.densify(s, e))
+
+
+def compute_factor_streamed_shards(
+    store,
+    params: KernelParams,
+    budget: int,
+    *,
+    key: Optional[jax.Array] = None,
+    eig_rtol: Optional[float] = None,
+    config: StreamConfig = StreamConfig(),
+    gram_fn: Callable = gram,
+    devices: Optional[Sequence] = None,
+):
+    """Out-of-core stage 1 from a checksummed on-disk `shards.ShardStore`.
+
+    The disk-tier twin of `compute_factor_streamed_csr`: the LIBSVM text was
+    parsed ONCE into the shard store, and every subsequent epoch/run streams
+    the verified binary shards instead of re-parsing.  Each shard is exactly
+    one wire chunk (``chunk_rows`` is pinned to the store's ``shard_rows``),
+    which keeps two invariants:
+
+      * an f32 store is byte-identical input to the host-RAM stream, so the
+        resulting factor is bit-equal to `compute_factor_streamed` on the
+        same rows for EVERY stage-1 wire dtype;
+      * an int8 store ships its STORED codes straight onto the int8 wire
+        (`QuantBlock` pass-through in `stream_factor_blocks` — zero
+        re-encode), its global-row-aligned scale groups landing exactly
+        where the host quantiser would put them.
+
+    Landmarks are gathered (and for int8 stores, decoded) from the shards
+    with the same jax-derived permutation as the other constructors.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n, p = store.n, store.cols
+    b = min(budget, n)
+    if b >= n:
+        lm_rows = np.arange(n)
+    else:
+        lm_rows = np.asarray(jax.random.choice(key, n, shape=(b,),
+                                               replace=False))
+    landmarks = jnp.asarray(store.gather_rows(lm_rows), jnp.float32)
+
+    wire = store.dtype == "int8"
+
+    def make_blocks(chunk):
+        return store.iter_blocks(wire=wire)
+
+    def row_provider(s, e):
+        if wire:
+            return store.read_shard(s // store.shard_rows, wire=True)
+        return store.read_rows(s, e)
+
+    cfg = dataclasses.replace(config, chunk_rows=store.shard_rows)
+    return _streamed_factor_from_landmarks(
+        landmarks, make_blocks, n, p, params, eig_rtol=eig_rtol,
+        config=cfg, gram_fn=gram_fn, devices=devices,
+        row_provider=row_provider)
+
+
+def _g_rebuilder(row_provider, chunk: int, n: int, landmarks, projector,
+                 params: KernelParams, config: StreamConfig,
+                 gram_fn: Callable, devices):
+    """Rebuild closure for spilled-G shards: recompute G rows [lo, hi).
+
+    Recomputes whole ORIGINAL chunks (chunk-aligned ranges, same wire dtype
+    and quant grouping as the first pass) and slices out the shard — stage-1
+    chunks are independent, so the recomputed rows are bit-equal to the
+    spilled ones and the shard-digest check in `ShardStore._rebuild` holds.
+    """
+    def rebuild(lo: int, hi: int) -> np.ndarray:
+        c0 = (lo // chunk) * chunk
+        c1 = min(n, -(-hi // chunk) * chunk)
+        blocks = (row_provider(s, min(s + chunk, c1))
+                  for s in range(c0, c1, chunk))
+        sub = stream_factor_blocks(
+            blocks, c1 - c0, landmarks, projector, params,
+            prefetch=config.prefetch, gram_fn=gram_fn, devices=devices,
+            wire_dtype=config.stage1_dtype,
+            quant_group_rows=config.quant_group_rows,
+            autotune_prefetch=False, trace=config.trace)
+        return sub[lo - c0:hi - c0]
+
+    return rebuild
 
 
 def _streamed_factor_from_landmarks(
     landmarks, make_blocks, n: int, p: int, params: KernelParams, *,
     eig_rtol: Optional[float], config: StreamConfig, gram_fn: Callable,
-    devices: Optional[Sequence],
+    devices: Optional[Sequence], row_provider=None,
 ):
     """Shared tail of the streamed stage-1 constructors: eigendecompose the
-    landmark kernel, then stream ``make_blocks(chunk_rows)`` into G."""
+    landmark kernel, then stream ``make_blocks(chunk_rows)`` into G.
+
+    ``row_provider(s, e)`` re-yields the input rows of [s, e) on demand; it
+    is only called when ``config.spill_g`` is set and a spilled G shard
+    later fails its checksum (quarantine -> recompute)."""
     from repro.core import nystrom  # deferred: nystrom routes back into us
 
     if eig_rtol is None:
@@ -531,8 +659,19 @@ def _streamed_factor_from_landmarks(
 
     chunk = auto_chunk_rows(n, p, landmarks.shape[0], config)
     stats = Stage1StreamStats()
-    out = progress = None
-    if config.checkpoint_dir:
+    out = progress = sink = None
+    if config.spill_g and config.shard_dir:
+        # Disk tier: G streams straight into checksummed f32 shards and is
+        # handed to stage 2 as a `GShardView` — the (n, rank) host buffer
+        # never exists.  Spill supersedes the stage-1 resume memmap (the
+        # shard store IS the durable copy of G).
+        import os as _os
+        from repro.core.shards import ShardSpillSink
+        sink = ShardSpillSink(_os.path.join(config.shard_dir, "g_spill"),
+                              n, rank, shard_rows=config.shard_rows,
+                              trace=config.trace)
+        out = sink
+    elif config.checkpoint_dir:
         # Resumable stage 1: G fills an on-disk memmap and completed chunk
         # ranges are logged durably, so a killed run restarts at the first
         # missing chunk.  Landmarks/projector are deterministic from the
@@ -555,6 +694,16 @@ def _streamed_factor_from_landmarks(
     finally:
         if progress is not None:
             progress.close()
+    if sink is not None:
+        rebuilder = None
+        if row_provider is not None:
+            rebuilder = _g_rebuilder(row_provider, chunk, n, landmarks,
+                                     projector, params, config, gram_fn,
+                                     devices)
+        G = sink.finish(
+            rebuilder=rebuilder, verify=config.verify_shards,
+            retries=0 if config.fail_fast else config.max_retries,
+            retry_backoff=config.retry_backoff)
 
     return nystrom.LowRankFactor(
         G=G, landmarks=landmarks, projector=projector, eigvals=evals,

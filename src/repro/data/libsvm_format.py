@@ -220,6 +220,49 @@ def read_libsvm_blocks(path: str, rows: int, n_features: int,
         yield emit(labels, indptr, indices, values)
 
 
+def read_libsvm_rows_range(path: str, lo: int, hi: int, n_features: int,
+                           on_bad_row: str = "raise",
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Parse ONLY data rows [lo, hi) (post-skip row coordinates) to dense.
+
+    The shard-store rebuild path (`core.shards.attach_source_rebuilder`):
+    when one shard fails its checksum, just that shard's row range is
+    re-parsed from the source text and re-encoded — not the whole file.
+    Row numbering matches the streamed ingest exactly: blank/comment lines
+    don't count, and with ``on_bad_row="skip"`` neither do dropped rows, so
+    row i here is row i of `read_libsvm_blocks` output.  Returns
+    (dense (hi-lo, n_features) f32, labels (hi-lo,) f64).
+    """
+    _check_bad_row_mode(on_bad_row)
+    if lo < 0 or hi < lo:
+        raise ValueError(f"bad row range [{lo}, {hi})")
+    labels, indptr, indices, values = [], [0], [], []
+    seen = 0
+    with open(path, "r") as f:
+        for lineno, line in enumerate(f, 1):
+            if seen >= hi:
+                break
+            out, _ = _parse_line(line, lineno, labels, indices, values,
+                                 on_bad_row)
+            if out != _DATA:
+                continue
+            seen += 1
+            if seen <= lo:
+                # Before the window: drop the parsed row again (cheaper than
+                # special-casing _parse_line for a skip-ahead mode).
+                del labels[:], indices[:], values[:]
+                continue
+            indptr.append(len(indices))
+    if seen < hi:
+        raise ValueError(f"row range [{lo}, {hi}) exceeds the {seen} data "
+                         f"rows in {path}")
+    dense = _scatter_dense(len(labels), n_features,
+                           np.asarray(indptr, np.int64),
+                           np.asarray(indices, np.int32),
+                           np.asarray(values, np.float32))
+    return dense, np.asarray(labels)
+
+
 def count_libsvm_rows(path: str) -> int:
     """Cheap first pass: number of data rows (landmark sampling needs n)."""
     n = 0

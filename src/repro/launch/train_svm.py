@@ -76,39 +76,92 @@ def class_conditioned_tokens(n: int, n_classes: int, seq: int, vocab: int,
 def train_from_libsvm(args, stream_config):
     """Out-of-core end-to-end path: LIBSVM file -> CSR -> streamed stage 1
     (`compute_factor_streamed_csr`) -> streamed stage 2.  The dense (n, p)
-    matrix is never materialised; training rows are scored from G."""
-    from repro.core import KernelParams, LPDSVM, StreamConfig
-    from repro.core.streaming import compute_factor_streamed_csr
-    from repro.data import IngestStats, read_libsvm
+    matrix is never materialised; training rows are scored from G.
 
-    t0 = time.time()
-    ingest = IngestStats()
-    data = read_libsvm(args.libsvm, n_features=args.n_features or None,
-                       on_bad_row=args.on_bad_row, stats=ingest)
-    t_read = time.time() - t0
-    if ingest.rows_skipped:
-        print(f"libsvm: skipped {ingest.rows_skipped} bad row(s) "
-              f"(--on-bad-row skip)")
-    if args.gamma is None:
-        # densify only a row subsample for the heuristic (median_gamma's own
-        # sampler never sees the CSR rows it was not handed)
-        rows = np.random.default_rng(0).choice(data.n, min(256, data.n),
-                                               replace=False)
-        args.gamma = median_gamma(data.densify_rows(np.sort(rows)))
+    With ``--shard-dir`` the text is parsed ONCE into the checksummed shard
+    store (`core/shards.py`) and this — and every later — run streams the
+    verified binary shards instead (`compute_factor_streamed_shards`): a
+    reused store performs zero text parses."""
+    from repro.core import KernelParams, LPDSVM, StreamConfig
+    from repro.core.streaming import (compute_factor_streamed_csr,
+                                      compute_factor_streamed_shards)
+
     cfg = stream_config or StreamConfig()
-    kp = KernelParams("rbf", gamma=args.gamma)
+    kp_gamma = args.gamma
     t0 = time.time()
-    factor = compute_factor_streamed_csr(data, kp, args.budget,
-                                         key=jax.random.PRNGKey(0), config=cfg)
+    if args.shard_dir:
+        import os
+        from repro.core.shards import ShardStoreStats, open_or_ingest
+        sstats = ShardStoreStats()
+        store, ingested = open_or_ingest(
+            args.libsvm, os.path.join(args.shard_dir, "data"),
+            n_features=args.n_features or None,
+            shard_rows=cfg.shard_rows,
+            dtype="int8" if args.stage1_dtype == "int8" else "f32",
+            on_bad_row=args.on_bad_row, verify=cfg.verify_shards,
+            retries=0 if cfg.fail_fast else cfg.max_retries,
+            retry_backoff=cfg.retry_backoff, stats=sstats, trace=cfg.trace)
+        t_read = time.time() - t0
+        n, p = store.n, store.cols
+        labels = store.labels()
+        skipped = int(store.manifest.get("rows_skipped", 0))
+        if skipped:
+            print(f"libsvm: skipped {skipped} bad row(s) (--on-bad-row skip)")
+        if kp_gamma is None:
+            rows = np.random.default_rng(0).choice(n, min(256, n),
+                                                   replace=False)
+            kp_gamma = median_gamma(store.gather_rows(np.sort(rows)))
+        kp = KernelParams("rbf", gamma=kp_gamma)
+        t0 = time.time()
+        factor = compute_factor_streamed_shards(
+            store, kp, args.budget, key=jax.random.PRNGKey(0), config=cfg)
+        src = "ingested (parsed once)" if ingested else "reused (no parse)"
+        shard_line = (f"shards: {store.n_shards} x {store.shard_rows} rows "
+                      f"({store.dtype}) under {args.shard_dir} — {src}")
+    else:
+        from repro.data import IngestStats, read_libsvm
+        ingest = IngestStats()
+        data = read_libsvm(args.libsvm, n_features=args.n_features or None,
+                           on_bad_row=args.on_bad_row, stats=ingest)
+        t_read = time.time() - t0
+        n, p = data.n, data.n_features
+        labels = data.labels
+        if ingest.rows_skipped:
+            print(f"libsvm: skipped {ingest.rows_skipped} bad row(s) "
+                  f"(--on-bad-row skip)")
+        if kp_gamma is None:
+            # densify only a row subsample for the heuristic (median_gamma's
+            # own sampler never sees the CSR rows it was not handed)
+            rows = np.random.default_rng(0).choice(n, min(256, n),
+                                                   replace=False)
+            kp_gamma = median_gamma(data.densify_rows(np.sort(rows)))
+        kp = KernelParams("rbf", gamma=kp_gamma)
+        t0 = time.time()
+        factor = compute_factor_streamed_csr(data, kp, args.budget,
+                                             key=jax.random.PRNGKey(0),
+                                             config=cfg)
+        shard_line = None
+    args.gamma = kp_gamma
     t_factor = time.time() - t0
     svm = LPDSVM(kp, C=args.C, budget=args.budget, tol=1e-2,
                  stream=True, stream_config=stream_config,
                  polish=args.polish, polish_levels=args.polish_levels)
-    svm.fit(None, data.labels, factor=factor)
+    svm.fit(None, labels, factor=factor)
     svm.stats.stage1_seconds = t_factor   # factor was computed out here
-    err = float(np.mean(svm.predict_from_factor() != data.labels))
-    print(f"libsvm: {data.n} rows x {data.n_features} features "
-          f"(nnz {len(data.values)}) in {t_read:.1f}s")
+    err = float(np.mean(svm.predict_from_factor() != labels))
+    print(f"libsvm: {n} rows x {p} features in {t_read:.1f}s")
+    if shard_line:
+        print(shard_line)
+        st = sstats
+        line = (f"shard io: {st.shards_read} reads "
+                f"{st.bytes_read / 2**20:.1f} MiB "
+                f"({st.read_gbps:.2f} GB/s), {st.verifications} verified")
+        if st.checksum_failures:
+            line += (f", {st.checksum_failures} corrupt -> "
+                     f"{st.quarantined} quarantined / {st.rebuilt} rebuilt")
+        if st.retries:
+            line += f", {st.retries} retried"
+        print(line)
     _report(svm)
     print(f"train error: {err:.4f}")
     return err
@@ -261,6 +314,26 @@ def main():
                     help="--libsvm ingest policy for malformed / non-finite "
                          "rows: 'raise' (default) aborts naming the line, "
                          "'skip' drops them and reports the count")
+    ap.add_argument("--shard-dir", default=None, metavar="DIR",
+                    help="durable disk tier (core/shards.py): with --libsvm, "
+                         "parse the text ONCE into checksummed binary shards "
+                         "under DIR/data and stream every run from them "
+                         "(re-runs skip the parse entirely); also the home "
+                         "of --spill-g stores; forces the streamed pipelines")
+    ap.add_argument("--shard-rows", type=int, default=4096,
+                    help="rows per shard file (default 4096; multiple of the "
+                         "int8 group size so stored scale groups stay "
+                         "global-row-aligned)")
+    ap.add_argument("--spill-g", action="store_true",
+                    help="stream the stage-1 factor G into f32 shards under "
+                         "--shard-dir and run stage 2 straight off the disk "
+                         "tier (the (n, B') host buffer never materialises)")
+    ap.add_argument("--verify-shards", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="recompute each shard's checksum on every read "
+                         "(default on; corrupt shards are quarantined and "
+                         "rebuilt from source — --no-verify-shards trusts "
+                         "the bytes)")
     ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
                     help="fault-tolerance state directory (core/resilience.py)"
                          ": stage 1 streams G into a resumable memmap there, "
@@ -300,6 +373,10 @@ def main():
         ap.error(f"--checkpoint-every must be >= 0, got {args.checkpoint_every}")
     if args.resume and not args.checkpoint_dir:
         ap.error("--resume requires --checkpoint-dir")
+    if args.shard_rows < 1:
+        ap.error(f"--shard-rows must be >= 1, got {args.shard_rows}")
+    if args.spill_g and not args.shard_dir:
+        ap.error("--spill-g requires --shard-dir")
 
     stream_config = None
     # An explicit chunk/tile size or wire dtype with no budget is a request
@@ -310,13 +387,14 @@ def main():
     quant = args.block_dtype != "f32" or args.stage1_dtype != "f32"
     # Checkpoints only exist on the streamed paths, so --checkpoint-dir is a
     # request to stream (like an explicit chunk/tile size with no budget).
-    force = args.stream or bool(args.checkpoint_dir) \
+    force = args.stream or bool(args.checkpoint_dir) or bool(args.shard_dir) \
         or ((args.chunk_rows > 0 or args.tile_rows > 0
              or quant) and args.device_budget_mb <= 0)
     cache_off = args.no_cache or args.cache_budget_mb == 0
     if (args.device_budget_mb > 0 or args.chunk_rows > 0
             or args.tile_rows > 0 or args.stream or quant or args.no_overlap
-            or cache_off or args.cache_budget_mb > 0 or args.checkpoint_dir):
+            or cache_off or args.cache_budget_mb > 0 or args.checkpoint_dir
+            or args.shard_dir):
         from repro.core import StreamConfig
         stream_config = StreamConfig(
             device_budget_bytes=int(args.device_budget_mb * 2**20) or 2 << 30,
@@ -332,7 +410,11 @@ def main():
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=(args.checkpoint_every
                               if args.checkpoint_dir else 0),
-            resume=args.resume)
+            resume=args.resume,
+            shard_dir=args.shard_dir,
+            shard_rows=args.shard_rows,
+            spill_g=args.spill_g,
+            verify_shards=args.verify_shards)
         if args.checkpoint_dir:
             print(f"checkpoint: {args.checkpoint_dir} (every "
                   f"{args.checkpoint_every} full passes"

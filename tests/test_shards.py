@@ -1,0 +1,658 @@
+"""Chaos suite for the durable disk tier (core/shards.py).
+
+The store's promises are the strong ones:
+
+  * TORN WRITES NEVER LIE — kill -9 at any point of an ingest leaves a
+    directory that either loads verified-clean or refuses with a ShardError
+    naming exactly what to rebuild (the manifest is written LAST, atomically);
+  * SILENT BIT ROT CANNOT PASS — every single-byte corruption of a shard
+    file is caught by the footer digest, quarantined, and rebuilt from
+    source BIT-EQUAL (the codec and the chunking are deterministic);
+  * THE DISK TIER IS INVISIBLE TO THE MATH — shard-backed stage 1 and a
+    shard-spilled G driving stage 2 are bit-equal to the host-RAM streams,
+    per wire dtype and device count, with the per-pass H2D invariant intact.
+
+All faults are deterministic (`core.faults` sites shard_write / shard_read /
+shard_corrupt), mirroring tests/test_resilience.py.
+"""
+import glob
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (GShardView, KernelParams, ShardCorruptionError,
+                        ShardError, ShardStore, ShardStoreStats, SolverConfig,
+                        StreamConfig, build_ovo_tasks,
+                        compute_factor_streamed,
+                        compute_factor_streamed_shards, ingest_libsvm_shards,
+                        open_or_ingest, solve_batch_streamed)
+from repro.core import faults as F
+from repro.core import shards as SH
+from repro.core.quant import GROUP_ROWS, dequantize_rows, quantize_rows
+from repro.core.trace import Tracer
+from repro.data import make_multiclass, write_libsvm
+from repro.data.libsvm_format import read_libsvm_rows_range
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:
+    import hypothesis
+    import hypothesis.strategies as hst
+    from hypothesis import given, settings
+    HAVE_HYP = True
+except ImportError:                                    # dev dep; CI installs
+    HAVE_HYP = False
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_plan():
+    yield
+    F.uninstall()
+
+
+def run_sub(code: str, n_dev: int = 2, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def _toy_libsvm(tmp_path, n=200, p=9, seed=0, name="toy.svm"):
+    """LIBSVM text + its canonical parsed f32 (text round-trip loses the
+    f32 bit pattern via %g, so parity baselines PARSE, never reuse x)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, p)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=n)
+    path = str(tmp_path / name)
+    write_libsvm(path, x, y)
+    dense, labels = read_libsvm_rows_range(path, 0, n, p)
+    return path, dense, labels
+
+
+def _flip(path, offset=None):
+    F._flip_byte(path, offset)
+
+
+# --------------------------------------------------------------------------
+# codec / store roundtrip
+# --------------------------------------------------------------------------
+
+def test_roundtrip_f32(tmp_path):
+    path, x, y = _toy_libsvm(tmp_path)
+    store = ingest_libsvm_shards(path, str(tmp_path / "s"), n_features=9,
+                                 shard_rows=64)
+    assert (store.n, store.cols, store.n_shards) == (200, 9, 4)
+    np.testing.assert_array_equal(store.read_rows(0, store.n), x)
+    np.testing.assert_array_equal(store.labels(), y)
+    np.testing.assert_array_equal(store.read_rows(60, 130), x[60:130])
+    np.testing.assert_array_equal(store.gather_rows([199, 0, 64, 63]),
+                                  x[[199, 0, 64, 63]])
+    assert store.verify_all() == []
+    # identity survives reopen
+    again = ShardStore(str(tmp_path / "s"))
+    assert again.fingerprint == store.fingerprint
+    assert int(store.manifest["rows_read"]) == 200
+
+
+def test_roundtrip_int8_stored_codes_are_the_wire_codes(tmp_path):
+    path, x, _ = _toy_libsvm(tmp_path, seed=3)
+    store = ingest_libsvm_shards(path, str(tmp_path / "s8"), n_features=9,
+                                 shard_rows=64, dtype="int8")
+    for i in range(store.n_shards):
+        lo, hi = store.shard_range(i)
+        qb = store.read_shard(i, wire=True)
+        v, s = quantize_rows(x[lo:hi], GROUP_ROWS, symmetric=True)
+        np.testing.assert_array_equal(qb.values, v)
+        np.testing.assert_array_equal(qb.scales, s)
+        np.testing.assert_array_equal(store.read_shard(i),
+                                      dequantize_rows(v, s, GROUP_ROWS))
+    # partial reads decode only the touched scale groups (cache off) yet
+    # match the full decode bitwise
+    cold = ShardStore(str(tmp_path / "s8"), cache_shards=0)
+    np.testing.assert_array_equal(cold.read_rows(37, 170),
+                                  store.read_rows(0, store.n)[37:170])
+
+
+def test_wire_read_requires_int8(tmp_path):
+    path, _, _ = _toy_libsvm(tmp_path)
+    store = ingest_libsvm_shards(path, str(tmp_path / "s"), n_features=9,
+                                 shard_rows=64)
+    with pytest.raises(ShardError, match="int8"):
+        store.read_shard(0, wire=True)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="multiple"):
+        StreamConfig(shard_rows=100)
+    with pytest.raises(ValueError, match="shard_dir"):
+        StreamConfig(spill_g=True)
+    with pytest.raises(ValueError, match="checkpoint_keep"):
+        StreamConfig(checkpoint_keep=-1)
+
+
+# --------------------------------------------------------------------------
+# torn writes: interrupted ingest can never produce a readable-but-wrong store
+# --------------------------------------------------------------------------
+
+def test_simulated_kill_mid_ingest_leaves_no_manifest(tmp_path):
+    path, x, y = _toy_libsvm(tmp_path)
+    d = str(tmp_path / "s")
+    F.install(F.FaultPlan().add("shard_write", kind="kill", shard=2))
+    with pytest.raises(F.SimulatedKill):
+        ingest_libsvm_shards(path, d, n_features=9, shard_rows=64)
+    F.uninstall()
+    with pytest.raises(ShardError, match="re-ingest"):
+        ShardStore(d)
+    # re-ingest over the debris converges to a clean verified store
+    store = ingest_libsvm_shards(path, d, n_features=9, shard_rows=64)
+    np.testing.assert_array_equal(store.read_rows(0, store.n), x)
+    np.testing.assert_array_equal(store.labels(), y)
+    assert store.verify_all() == []
+
+
+def test_real_sigkill_mid_ingest(tmp_path):
+    """kill -9 the writer process at an arbitrary real point: the store
+    either loads verified-clean or refuses naming the interrupted ingest."""
+    path, x, y = _toy_libsvm(tmp_path, n=400)
+    d = str(tmp_path / "s")
+    code = f"""
+import sys, time
+from repro.core.shards import ingest_libsvm_shards
+import repro.core.shards as SH
+_orig = SH._fsync_write
+def slow(path, buffers):
+    r = _orig(path, buffers)
+    print("WROTE", path, flush=True)
+    time.sleep(0.25)
+    return r
+SH._fsync_write = slow
+ingest_libsvm_shards({path!r}, {d!r}, n_features=9, shard_rows=64)
+print("DONE", flush=True)
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.Popen([sys.executable, "-c", code], env=env,
+                            stdout=subprocess.PIPE, text=True)
+    # wait until at least one shard landed, then SIGKILL mid-write window
+    deadline = time.time() + 120
+    seen = 0
+    while time.time() < deadline and seen < 2:
+        line = proc.stdout.readline()
+        if line.startswith("WROTE"):
+            seen += 1
+        if line.startswith("DONE"):
+            break
+    proc.kill()
+    proc.wait()
+    assert seen >= 1, "writer never produced a shard"
+    try:
+        store = ShardStore(d)
+        # manifest landed => the store MUST be complete and verified-clean
+        np.testing.assert_array_equal(store.read_rows(0, store.n), x)
+        assert store.verify_all() == []
+    except ShardError as exc:
+        assert "re-ingest" in str(exc) or "missing" in str(exc)
+    # and recovery is always just: ingest again
+    store = ingest_libsvm_shards(path, d, n_features=9, shard_rows=64)
+    np.testing.assert_array_equal(store.read_rows(0, store.n), x)
+    np.testing.assert_array_equal(store.labels(), y)
+
+
+# --------------------------------------------------------------------------
+# bit rot: detect -> quarantine -> rebuild bit-equal
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["f32", "int8"])
+def test_bitflip_detected_quarantined_rebuilt_bit_equal(tmp_path, dtype):
+    path, x, y = _toy_libsvm(tmp_path, seed=5)
+    d = str(tmp_path / "s")
+    store = ingest_libsvm_shards(path, d, n_features=9, shard_rows=64,
+                                 dtype=dtype)
+    before = store.read_rows(0, store.n).copy()
+    shard = os.path.join(d, SH.shard_name(1))
+    _flip(shard)
+
+    tr = Tracer()
+    st = ShardStoreStats()
+    fresh = ShardStore(d, stats=st, trace=tr)
+    SH.attach_source_rebuilder(fresh, path)
+    after = fresh.read_rows(0, fresh.n)
+    np.testing.assert_array_equal(after, before)          # bit-equal rebuild
+    np.testing.assert_array_equal(fresh.labels(), y)
+    assert st.checksum_failures == 1
+    assert st.quarantined == 1
+    assert st.rebuilt == 1
+    # the rotten file is preserved for forensics, not deleted
+    assert os.path.exists(os.path.join(d, SH.QUARANTINE_DIR,
+                                       SH.shard_name(1)))
+    names = [(e[1], e[2]) for e in tr.events()]
+    assert ("fault", "shard_corrupt") in names
+    assert ("recovery", "shard_rebuilt") in names
+    # the rebuilt file is byte-identical: a re-read verifies clean
+    assert ShardStore(d).verify_all() == []
+
+
+def test_bitflip_without_rebuilder_raises(tmp_path):
+    path, _, _ = _toy_libsvm(tmp_path)
+    d = str(tmp_path / "s")
+    ingest_libsvm_shards(path, d, n_features=9, shard_rows=64)
+    _flip(os.path.join(d, SH.shard_name(2)))
+    store = ShardStore(d)      # no rebuilder attached
+    with pytest.raises(ShardCorruptionError, match="no rebuilder"):
+        store.read_rows(0, store.n)
+
+
+def test_missing_shards_reported_exactly(tmp_path):
+    path, x, _ = _toy_libsvm(tmp_path)
+    d = str(tmp_path / "s")
+    ingest_libsvm_shards(path, d, n_features=9, shard_rows=64)
+    os.remove(os.path.join(d, SH.shard_name(0)))
+    os.remove(os.path.join(d, SH.shard_name(3)))
+    with pytest.raises(ShardError) as exc:
+        ShardStore(d)
+    assert SH.shard_name(0) in str(exc.value)
+    assert SH.shard_name(3) in str(exc.value)
+    # re-ingest heals the store completely
+    healed = ingest_libsvm_shards(path, d, n_features=9, shard_rows=64)
+    np.testing.assert_array_equal(healed.read_rows(0, healed.n), x)
+
+
+def test_missing_shard_rebuilds_from_source(tmp_path):
+    path, x, _ = _toy_libsvm(tmp_path)
+    d = str(tmp_path / "s")
+    store = ingest_libsvm_shards(path, d, n_features=9, shard_rows=64)
+    os.remove(os.path.join(d, SH.shard_name(1)))
+    st = ShardStoreStats()
+    fresh = ShardStore(d, stats=st,
+                       rebuilder=store.rebuilder)   # source re-parse closure
+    np.testing.assert_array_equal(fresh.read_rows(0, fresh.n), x)
+    assert st.rebuilt == 1 and st.quarantined == 0
+
+
+def test_rebuild_refuses_changed_source(tmp_path):
+    path, _, _ = _toy_libsvm(tmp_path)
+    d = str(tmp_path / "s")
+    ingest_libsvm_shards(path, d, n_features=9, shard_rows=64)
+    _flip(os.path.join(d, SH.shard_name(1)))
+    with open(path) as f:
+        lines = f.readlines()
+    lines[70] = "1 1:9.75 2:-3.5\n"          # row inside shard 1's range
+    with open(path, "w") as f:
+        f.writelines(lines)
+    store = ShardStore(d)
+    SH.attach_source_rebuilder(store, path)
+    with pytest.raises(ShardError, match="source changed"):
+        store.read_rows(0, store.n)
+
+
+def test_every_single_byte_corruption_detected(tmp_path):
+    """Exhaustive: flip EVERY byte of a shard file in turn — the verified
+    read must refuse each one (header, payload, labels, footer alike)."""
+    path, _, _ = _toy_libsvm(tmp_path, n=40, p=3)
+    d = str(tmp_path / "s")
+    ingest_libsvm_shards(path, d, n_features=3, shard_rows=32)
+    shard = os.path.join(d, SH.shard_name(0))
+    raw = open(shard, "rb").read()
+    store = ShardStore(d, cache_shards=0)
+    for off in range(len(raw)):
+        bad = bytearray(raw)
+        bad[off] ^= 0x01
+        with open(shard, "wb") as f:
+            f.write(bad)
+        with pytest.raises(ShardCorruptionError):
+            store._load(0)
+    with open(shard, "wb") as f:
+        f.write(raw)
+    store._load(0)                                   # restored: clean again
+
+
+# --------------------------------------------------------------------------
+# transient IO: bounded retry vs fail-fast
+# --------------------------------------------------------------------------
+
+def test_transient_io_retry_recovers(tmp_path):
+    path, x, _ = _toy_libsvm(tmp_path)
+    d = str(tmp_path / "s")
+    ingest_libsvm_shards(path, d, n_features=9, shard_rows=64)
+    tr = Tracer()
+    st = ShardStoreStats()
+    store = ShardStore(d, retries=3, retry_backoff=0.0, stats=st, trace=tr)
+    F.install(F.FaultPlan().add("shard_read", kind="io", times=2, shard=1))
+    np.testing.assert_array_equal(store.read_rows(0, store.n), x)
+    assert st.retries == 2
+    names = [(e[1], e[2]) for e in tr.events()]
+    assert ("fault", "shard_read_retry") in names
+    assert ("recovery", "shard_read_ok") in names
+
+
+def test_transient_io_fail_fast(tmp_path):
+    path, _, _ = _toy_libsvm(tmp_path)
+    d = str(tmp_path / "s")
+    ingest_libsvm_shards(path, d, n_features=9, shard_rows=64)
+    store = ShardStore(d, retries=0)
+    F.install(F.FaultPlan().add("shard_read", kind="io", shard=1))
+    with pytest.raises(F.InjectedIOError):
+        store.read_rows(0, store.n)
+
+
+def test_retry_budget_exhausted_raises(tmp_path):
+    path, _, _ = _toy_libsvm(tmp_path)
+    d = str(tmp_path / "s")
+    ingest_libsvm_shards(path, d, n_features=9, shard_rows=64)
+    store = ShardStore(d, retries=2, retry_backoff=0.0)
+    F.install(F.FaultPlan().add("shard_read", kind="io", times=5, shard=0))
+    with pytest.raises(F.InjectedIOError):
+        store.read_rows(0, 10)
+    assert store.stats.retries == 2
+
+
+# --------------------------------------------------------------------------
+# parse-once: re-runs never touch the text
+# --------------------------------------------------------------------------
+
+def test_open_or_ingest_reuses_without_parsing(tmp_path, monkeypatch):
+    path, x, y = _toy_libsvm(tmp_path)
+    d = str(tmp_path / "s")
+    _, ingested = open_or_ingest(path, d, n_features=9, shard_rows=64)
+    assert ingested
+
+    import repro.data.libsvm_format as lf
+
+    def _boom(*a, **k):
+        raise AssertionError("reused store must not re-parse the text")
+
+    monkeypatch.setattr(lf, "read_libsvm", _boom)
+    monkeypatch.setattr(lf, "read_libsvm_blocks", _boom)
+    monkeypatch.setattr(lf, "count_libsvm_rows", _boom)
+    store, ingested = open_or_ingest(path, d, n_features=9, shard_rows=64)
+    assert not ingested
+    assert store.n == 200                      # row count from the manifest
+    np.testing.assert_array_equal(store.labels(), y)
+    np.testing.assert_array_equal(store.read_rows(0, store.n), x)
+
+
+def test_open_or_ingest_invalidates_on_change(tmp_path):
+    path, _, _ = _toy_libsvm(tmp_path)
+    d = str(tmp_path / "s")
+    open_or_ingest(path, d, n_features=9, shard_rows=64)
+    # different shard size -> re-ingest
+    _, again = open_or_ingest(path, d, n_features=9, shard_rows=128)
+    assert again
+    # edited source -> re-ingest (fingerprint covers content, not mtime)
+    with open(path, "a") as f:
+        f.write("1 1:0.5\n")
+    _, again = open_or_ingest(path, d, n_features=9, shard_rows=128)
+    assert again
+
+
+# --------------------------------------------------------------------------
+# stage-1 parity: the disk tier is numerically invisible
+# --------------------------------------------------------------------------
+
+def _parity_problem(tmp_path, seed=7):
+    path, x, y = _toy_libsvm(tmp_path, n=300, seed=seed)
+    store = ingest_libsvm_shards(path, str(tmp_path / "s"), n_features=9,
+                                 shard_rows=64)
+    return path, x, y, store
+
+
+@pytest.mark.parametrize("wire", ["f32", "int8"])
+def test_stage1_shard_parity(tmp_path, wire):
+    _, x, _, store = _parity_problem(tmp_path)
+    params = KernelParams("rbf", gamma=0.5)
+    cfg = StreamConfig(chunk_rows=64, stage1_dtype=wire)
+    host = compute_factor_streamed(x, params, 48, config=cfg)
+    shrd = compute_factor_streamed_shards(store, params, 48, config=cfg)
+    np.testing.assert_array_equal(np.asarray(host.G), np.asarray(shrd.G))
+    np.testing.assert_array_equal(np.asarray(host.landmarks),
+                                  np.asarray(shrd.landmarks))
+
+
+def test_stage1_int8_store_passthrough_deterministic(tmp_path):
+    path, x, _, _ = _parity_problem(tmp_path)
+    st8 = ingest_libsvm_shards(path, str(tmp_path / "s8"), n_features=9,
+                               shard_rows=64, dtype="int8")
+    params = KernelParams("rbf", gamma=0.5)
+    cfg = StreamConfig(chunk_rows=64, stage1_dtype="int8")
+    a = compute_factor_streamed_shards(st8, params, 48, config=cfg)
+    b = compute_factor_streamed_shards(st8, params, 48, config=cfg)
+    np.testing.assert_array_equal(np.asarray(a.G), np.asarray(b.G))
+    # stored codes went straight to the wire: no host re-encode was traced
+    assert a.stage1_stats.bytes_scales > 0
+
+
+# --------------------------------------------------------------------------
+# G spill: stage 2 off the disk tier, bit-equal per wire dtype
+# --------------------------------------------------------------------------
+
+def _spilled_factor(tmp_path, store, gamma=0.5):
+    params = KernelParams("rbf", gamma=gamma)
+    cfg = StreamConfig(chunk_rows=64, shard_dir=str(tmp_path / "spill"),
+                       shard_rows=64, spill_g=True)
+    return compute_factor_streamed_shards(store, params, 48, config=cfg)
+
+
+def test_spill_g_matches_host_factor(tmp_path):
+    _, x, _, store = _parity_problem(tmp_path)
+    host = compute_factor_streamed(x, KernelParams("rbf", gamma=0.5), 48,
+                                   config=StreamConfig(chunk_rows=64))
+    spill = _spilled_factor(tmp_path, store)
+    G = spill.G
+    assert isinstance(G, GShardView) and G.is_shard_view
+    assert G.shape == np.asarray(host.G).shape
+    np.testing.assert_array_equal(np.asarray(G), np.asarray(host.G))
+
+
+def test_spilled_g_corrupt_rebuild_bit_equal(tmp_path):
+    _, x, _, store = _parity_problem(tmp_path)
+    spill = _spilled_factor(tmp_path, store)
+    G = spill.G
+    want = np.asarray(G).copy()
+    shard = sorted(glob.glob(str(tmp_path / "spill" / "g_spill" /
+                                 "shard_*.bin")))[2]
+    _flip(shard)
+    G.store._cache.clear()
+    np.testing.assert_array_equal(np.asarray(G), want)
+    assert G.store.stats.rebuilt == 1
+    assert G.store.stats.quarantined == 1
+
+
+@pytest.mark.parametrize("wire", ["f32", "bf16", "int8"])
+def test_stage2_from_shard_view_bit_equal(tmp_path, wire):
+    _, x, labels01, store = _parity_problem(tmp_path)
+    labels = (labels01 > 0).astype(int)
+    host = compute_factor_streamed(x, KernelParams("rbf", gamma=0.5), 48,
+                                   config=StreamConfig(chunk_rows=64))
+    spill = _spilled_factor(tmp_path, store)
+    Gh = np.asarray(host.G)
+    tasks, _ = build_ovo_tasks(labels, 2, 1.0)
+    cfg = SolverConfig(tol=1e-3, max_epochs=30)
+    sc = StreamConfig(tile_rows=64, block_dtype=wire)
+    a = solve_batch_streamed(Gh, tasks, cfg, stream_config=sc)
+    b = solve_batch_streamed(spill.G, tasks, cfg, stream_config=sc)
+    np.testing.assert_array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+    np.testing.assert_array_equal(np.asarray(a.epochs), np.asarray(b.epochs))
+
+
+def test_stage2_warm_start_from_shard_view(tmp_path):
+    _, x, labels01, store = _parity_problem(tmp_path)
+    labels = (labels01 > 0).astype(int)
+    host = compute_factor_streamed(x, KernelParams("rbf", gamma=0.5), 48,
+                                   config=StreamConfig(chunk_rows=64))
+    spill = _spilled_factor(tmp_path, store)
+    cfg = SolverConfig(tol=1e-3, max_epochs=8)
+    sc = StreamConfig(tile_rows=64)
+    tasks, _ = build_ovo_tasks(labels, 2, 1.0)
+    seed = solve_batch_streamed(np.asarray(host.G), tasks, cfg,
+                                stream_config=sc)
+    warm, _ = build_ovo_tasks(labels, 2, 4.0,
+                              alpha0=list(np.asarray(seed.alpha)))
+    a = solve_batch_streamed(np.asarray(host.G), warm, cfg, stream_config=sc)
+    b = solve_batch_streamed(spill.G, warm, cfg, stream_config=sc)
+    np.testing.assert_array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+
+
+def test_multidevice_farm_from_shard_view():
+    """2-device farm off a spilled G: same model as host G, and the shared
+    reader's per-pass G bytes unchanged by the disk tier."""
+    out = run_sub("""
+import os, tempfile, numpy as np, jax
+from repro.core import (KernelParams, SolverConfig, StreamConfig,
+                        build_ovo_tasks, compute_factor_streamed,
+                        compute_factor_streamed_shards, ingest_libsvm_shards,
+                        solve_tasks_streamed)
+from repro.data import write_libsvm
+from repro.data.libsvm_format import read_libsvm_rows_range
+
+assert jax.device_count() == 2
+d = tempfile.mkdtemp()
+rng = np.random.default_rng(11)
+x = rng.normal(size=(240, 7)).astype(np.float32)
+y = rng.integers(0, 3, size=240)
+path = os.path.join(d, "t.svm")
+write_libsvm(path, x, y.astype(float))
+xt, yt = read_libsvm_rows_range(path, 0, 240, 7)
+store = ingest_libsvm_shards(path, os.path.join(d, "s"), n_features=7,
+                             shard_rows=64)
+host = compute_factor_streamed(xt, KernelParams("rbf", gamma=0.5), 40,
+                               config=StreamConfig(chunk_rows=64))
+spill = compute_factor_streamed_shards(
+    store, KernelParams("rbf", gamma=0.5), 40,
+    config=StreamConfig(chunk_rows=64, shard_dir=os.path.join(d, "sp"),
+                        shard_rows=64, spill_g=True))
+np.testing.assert_array_equal(np.asarray(host.G), np.asarray(spill.G))
+_, labels = np.unique(yt, return_inverse=True)
+tasks, _ = build_ovo_tasks(labels, 3, 1.0)
+cfg = SolverConfig(tol=1e-3, max_epochs=25)
+sc = StreamConfig(tile_rows=64)
+a, sa = solve_tasks_streamed(np.asarray(host.G), tasks, cfg,
+                             devices=jax.devices(), stream_config=sc,
+                             return_stats=True)
+b, sb = solve_tasks_streamed(spill.G, tasks, cfg, devices=jax.devices(),
+                             stream_config=sc, return_stats=True)
+np.testing.assert_array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+assert sa.epoch_bytes == sb.epoch_bytes, (sa.epoch_bytes, sb.epoch_bytes)
+print("OK", sb.n_devices, sb.epoch_bytes[0])
+""")
+    assert "OK 2" in out
+
+
+# --------------------------------------------------------------------------
+# resume safety: snapshots pin the shard-manifest identity
+# --------------------------------------------------------------------------
+
+def test_resume_refuses_mutated_store(tmp_path):
+    _, x, labels01, store = _parity_problem(tmp_path)
+    labels = (labels01 > 0).astype(int)
+    spill = _spilled_factor(tmp_path, store)
+    tasks, _ = build_ovo_tasks(labels, 2, 1.0)
+    cfg = SolverConfig(tol=1e-3, max_epochs=30)
+    ck = str(tmp_path / "ckpt")
+    sc = StreamConfig(tile_rows=64, checkpoint_dir=ck, checkpoint_every=1)
+    F.install(F.FaultPlan().add("epoch_boundary", kind="kill", epoch=2))
+    with pytest.raises(F.SimulatedKill):
+        solve_batch_streamed(spill.G, tasks, cfg, stream_config=sc)
+    F.uninstall()
+    # a DIFFERENT spilled store (other gamma -> other shard digests)
+    other = _spilled_factor(tmp_path / "other", store, gamma=0.9)
+    assert other.G.g_fingerprint != spill.G.g_fingerprint
+    sc2 = StreamConfig(tile_rows=64, checkpoint_dir=ck, checkpoint_every=1,
+                       resume=True)
+    with pytest.raises(ValueError, match="fingerprint"):
+        solve_batch_streamed(other.G, tasks, cfg, stream_config=sc2)
+    # the untouched store resumes fine, bit-equal to a clean run
+    clean = solve_batch_streamed(spill.G, tasks, cfg,
+                                 stream_config=StreamConfig(tile_rows=64))
+    res = solve_batch_streamed(spill.G, tasks, cfg, stream_config=sc2)
+    np.testing.assert_array_equal(np.asarray(clean.alpha),
+                                  np.asarray(res.alpha))
+    np.testing.assert_array_equal(np.asarray(clean.w), np.asarray(res.w))
+
+
+def test_checkpoint_keep_last_k(tmp_path):
+    G, tasks, _ = _solver_problem()
+    # shrinking off: every epoch is a full pass, so checkpoint_every=1
+    # snapshots on every epoch boundary and retention has work to do
+    cfg = SolverConfig(tol=1e-4, max_epochs=40, shrink=False)
+    d = str(tmp_path / "ck")
+    sc = StreamConfig(tile_rows=64, checkpoint_dir=d, checkpoint_every=1,
+                      checkpoint_keep=2)
+    solve_batch_streamed(G, tasks, cfg, stream_config=sc)
+    steps = sorted(f for f in os.listdir(d) if f.startswith("step_"))
+    assert len(steps) == 2
+    # the survivors are the NEWEST snapshots
+    all_d = str(tmp_path / "ck_all")
+    sc_all = StreamConfig(tile_rows=64, checkpoint_dir=all_d,
+                          checkpoint_every=1, checkpoint_keep=0)
+    solve_batch_streamed(G, tasks, cfg, stream_config=sc_all)
+    every = sorted(f for f in os.listdir(all_d) if f.startswith("step_"))
+    assert len(every) > 2
+    assert steps == every[-2:]
+
+
+def _solver_problem(n=240, classes=3, seed=1, budget=40):
+    x, y = make_multiclass(n=n, n_classes=classes, seed=seed)
+    _, labels = np.unique(y, return_inverse=True)
+    fac = compute_factor_streamed(np.asarray(x, np.float32),
+                                  KernelParams("rbf", gamma=0.25), budget,
+                                  config=StreamConfig(chunk_rows=64))
+    tasks, _ = build_ovo_tasks(labels, classes, 1.0)
+    return np.asarray(fac.G), tasks, labels
+
+
+# --------------------------------------------------------------------------
+# hypothesis properties (dev dep; CI runs them, bare containers skip)
+# --------------------------------------------------------------------------
+
+if HAVE_HYP:
+    hypothesis.settings.register_profile(
+        "shards", deadline=None, max_examples=15,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                               hypothesis.HealthCheck.function_scoped_fixture])
+    hypothesis.settings.load_profile("shards")
+
+    @given(hst.integers(33, 150), hst.integers(1, 6), hst.integers(0, 2**32))
+    def test_hyp_store_roundtrip(tmp_path_factory, n, p, seed):
+        tmp = tmp_path_factory.mktemp("hyp")
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(n, p)).astype(np.float32)
+        y = rng.choice([-1.0, 1.0], size=n)
+        path = str(tmp / "d.svm")
+        write_libsvm(path, x, y)
+        xt, yt = read_libsvm_rows_range(path, 0, n, p)
+        store = ingest_libsvm_shards(path, str(tmp / "s"), n_features=p,
+                                     shard_rows=32)
+        np.testing.assert_array_equal(store.read_rows(0, n), xt)
+        np.testing.assert_array_equal(store.labels(), yt)
+
+    @given(hst.integers(0, 2**32), hst.integers(1, 8), hst.integers(0, 10**9))
+    def test_hyp_any_corruption_detected(tmp_path_factory, seed, bit, where):
+        tmp = tmp_path_factory.mktemp("hypc")
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(64, 4)).astype(np.float32)
+        y = rng.choice([-1.0, 1.0], size=64)
+        path = str(tmp / "d.svm")
+        write_libsvm(path, x, y)
+        store = ingest_libsvm_shards(path, str(tmp / "s"), n_features=4,
+                                     shard_rows=32)
+        shard = os.path.join(str(tmp / "s"), SH.shard_name(0))
+        raw = bytearray(open(shard, "rb").read())
+        raw[where % len(raw)] ^= (1 << (bit - 1)) or 1
+        with open(shard, "wb") as f:
+            f.write(raw)
+        cold = ShardStore(str(tmp / "s"), cache_shards=0)
+        with pytest.raises(ShardCorruptionError):
+            cold._load(0)
